@@ -1,0 +1,46 @@
+"""Paper Figure 3: runtime-vs-n scaling curves (log-scale in the paper).
+
+Explicit-A GPIC scales O(n²); the matrix-free path O(n·m) — the figure's
+CSV shows both slopes plus the serial baseline at small n.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gpic, gpic_matrix_free, pic_serial_numpy
+from repro.data import two_moons
+
+from .common import csv_row, time_fn
+
+
+def run(max_iter=3):
+    rows = []
+    key = jax.random.key(0)
+    xw, _ = two_moons(64, seed=0)
+    pic_serial_numpy(xw, 2, affinity_kind="cosine_shifted", max_iter=2)
+    for n in (500, 1000, 2000, 4000):
+        x, _ = two_moons(n, seed=0)
+        _, _, tm = pic_serial_numpy(x, 2, affinity_kind="cosine_shifted",
+                                    max_iter=max_iter, return_timings=True)
+        rows.append(csv_row(f"fig3/serial/n={n}", tm["total_s"], ""))
+    for n in (500, 1000, 2000, 4000, 8000):
+        x, _ = two_moons(n, seed=0)
+        xj = jnp.asarray(x)
+        t, _ = time_fn(lambda: gpic(xj, 2, key=key, max_iter=max_iter,
+                                    affinity_kind="cosine_shifted",
+                                    use_pallas=False))
+        rows.append(csv_row(f"fig3/gpic/n={n}", t, ""))
+    for n in (500, 2000, 8000, 32000, 128000):
+        x, _ = two_moons(n, seed=0)
+        xj = jnp.asarray(x)
+        t, _ = time_fn(lambda: gpic_matrix_free(xj, 2, key=key,
+                                                max_iter=max_iter,
+                                                affinity_kind="cosine_shifted"))
+        rows.append(csv_row(f"fig3/gpic_mf/n={n}", t, ""))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

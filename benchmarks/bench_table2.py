@@ -1,0 +1,56 @@
+"""Paper Table 2: runtime + speedup of GPIC vs serial PIC (and the parallel
+baseline).
+
+Mapping onto this container (CPU; TPU is the compile target):
+  "PIC serial"    -> pic_serial_numpy (row-loop numpy, the MATLAB stand-in)
+  "GPIC"          -> gpic() jit-compiled fused pipeline (XLA; the same fused
+                     program the Pallas kernels implement on TPU)
+  "GPIC-MF"       -> gpic_matrix_free() — beyond-paper O2 path
+Parameters follow the paper: max_iter=3, eps=1e-5/n, cosine similarity, m=2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gpic, gpic_matrix_free, pic_serial_numpy
+from repro.data import three_circles, two_moons
+
+from .common import csv_row, time_fn
+
+
+def run(sizes=(1000, 2000, 4000), max_iter=3):
+    rows = []
+    key = jax.random.key(0)
+    for name, gen, k in (("two_moons", two_moons, 2),
+                         ("three_circles", three_circles, 3)):
+        xw, _ = gen(64, seed=0)
+        pic_serial_numpy(xw, k, affinity_kind="cosine_shifted", max_iter=2)
+        for n in sizes:
+            x, _ = gen(n, seed=0)
+            xj = jnp.asarray(x)
+
+            _, _, tm = pic_serial_numpy(x, k, affinity_kind="cosine_shifted",
+                                        max_iter=max_iter,
+                                        return_timings=True)
+            t_serial = tm["total_s"]
+
+            t_gpic, _ = time_fn(
+                lambda: gpic(xj, k, key=key, affinity_kind="cosine_shifted",
+                             max_iter=max_iter, use_pallas=False))
+            t_mf, _ = time_fn(
+                lambda: gpic_matrix_free(xj, k, key=key,
+                                         affinity_kind="cosine_shifted",
+                                         max_iter=max_iter))
+
+            rows.append(csv_row(f"table2/{name}/n={n}/serial", t_serial, ""))
+            rows.append(csv_row(f"table2/{name}/n={n}/gpic", t_gpic,
+                                f"speedup={t_serial / t_gpic:.1f}x"))
+            rows.append(csv_row(f"table2/{name}/n={n}/gpic_mf", t_mf,
+                                f"speedup={t_serial / t_mf:.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,64 @@
+"""Roofline report: aggregates experiments/dryrun/*.json into the §Roofline
+table (per arch × shape × mesh: three terms, dominant bottleneck, MODEL_FLOPS
+ratio)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(dryrun_dir="experiments/dryrun"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def table(dryrun_dir="experiments/dryrun", mesh="16x16"):
+    rows = []
+    hdr = (f"{'arch':28s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'collective':>10s} {'dominant':>10s} {'useful':>7s} {'frac':>6s}")
+    rows.append(hdr)
+    for c in load(dryrun_dir):
+        if c.get("mesh") != mesh:
+            continue
+        if c.get("status") == "skipped":
+            rows.append(f"{c['arch']:28s} {c['shape']:12s} "
+                        f"{'N/A (' + c['reason'][:48] + ')'}")
+            continue
+        if c.get("status") != "ok":
+            rows.append(f"{c['arch']:28s} {c['shape']:12s} ERROR")
+            continue
+        r = c["roofline"]
+        terms = {k: r[k + "_s"] for k in ("compute", "memory", "collective")}
+        frac = terms["compute"] / max(max(terms.values()), 1e-30)
+        rows.append(
+            f"{c['arch']:28s} {c['shape']:12s} "
+            f"{terms['compute']*1e3:9.1f}ms {terms['memory']*1e3:9.1f}ms "
+            f"{terms['collective']*1e3:9.1f}ms {r['dominant']:>10s} "
+            f"{c['useful_compute_ratio']:7.3f} {frac:6.3f}")
+    return rows
+
+
+def run():
+    out = []
+    for c in load():
+        if c.get("status") != "ok":
+            continue
+        r = c["roofline"]
+        name = f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}"
+        total = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        out.append(
+            f"{name},{total*1e6:.1f},dominant={r['dominant']} "
+            f"compute_ms={r['compute_s']*1e3:.1f} "
+            f"memory_ms={r['memory_s']*1e3:.1f} "
+            f"collective_ms={r['collective_s']*1e3:.1f} "
+            f"useful={c['useful_compute_ratio']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    for row in table():
+        print(row)

@@ -1,0 +1,51 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick set
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sizes
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: table1,table2,fig3,exp2,"
+                         "roofline")
+    args = ap.parse_args()
+
+    from . import bench_exp2, bench_fig3, bench_table1, bench_table2, roofline
+
+    jobs = {
+        "table1": lambda: bench_table1.run(
+            sizes=(1000, 2000, 4000, 8000) if args.full else (1000, 2000)),
+        "table2": lambda: bench_table2.run(
+            sizes=(1000, 2000, 4000, 8000) if args.full else (1000, 2000)),
+        "fig3": lambda: bench_fig3.run(),
+        "exp2": lambda: bench_exp2.run(
+            n=45_000 if args.full else 9_000,
+            repeats=10 if args.full else 2,
+            fractions=((0.002, 0.005, 0.01, 0.02, 0.05, 0.1) if args.full
+                       else (0.01, 0.05, 0.2))),
+        "roofline": roofline.run,
+    }
+    selected = (args.only.split(",") if args.only else list(jobs))
+
+    print("name,us_per_call,derived")
+    for name in selected:
+        try:
+            for row in jobs[name]():
+                print(row, flush=True)
+        except Exception as e:  # keep the harness running
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}", file=sys.stderr)
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Core GPIC library: the paper's contribution as composable JAX modules."""
+from .affinity import (
+    affinity_chunked,
+    affinity_matrix,
+    degree_matrix_free,
+    matvec_matrix_free,
+    rbf_bandwidth_heuristic,
+    row_normalize_features,
+)
+from .gpic import gpic, gpic_matrix_free
+from .kmeans import kmeans, kmeans_objective, kmeans_plus_plus_init
+from .metrics import adjusted_rand_index, jaccard_index, purity, rand_index
+from .pic import PICResult, pic_from_affinity, pic_reference, pic_serial_numpy
+
+__all__ = [
+    "affinity_matrix",
+    "affinity_chunked",
+    "matvec_matrix_free",
+    "degree_matrix_free",
+    "row_normalize_features",
+    "rbf_bandwidth_heuristic",
+    "kmeans",
+    "kmeans_objective",
+    "kmeans_plus_plus_init",
+    "adjusted_rand_index",
+    "jaccard_index",
+    "rand_index",
+    "purity",
+    "PICResult",
+    "pic_reference",
+    "pic_from_affinity",
+    "pic_serial_numpy",
+    "gpic",
+    "gpic_matrix_free",
+]

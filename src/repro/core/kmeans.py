@@ -1,0 +1,73 @@
+"""k-means (kmeans++ init + Lloyd iterations) in pure JAX.
+
+Used as the final step of PIC/GPIC (cluster the 1-D power-iteration embedding)
+and, more generally, on (n, d) embeddings (e.g. LM token-embedding clustering).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _pairwise_sqdist(x: jax.Array, c: jax.Array) -> jax.Array:
+    """(n, d) x (k, d) -> (n, k) squared euclidean distances."""
+    xx = jnp.sum(x * x, axis=1)[:, None]
+    cc = jnp.sum(c * c, axis=1)[None, :]
+    return jnp.maximum(xx + cc - 2.0 * (x @ c.T), 0.0)
+
+
+def kmeans_plus_plus_init(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
+    """kmeans++ seeding: iteratively sample points proportional to D^2."""
+    n = x.shape[0]
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+    cents0 = jnp.tile(x[first][None, :], (k, 1))
+
+    def body(i, carry):
+        cents, key, mind2 = carry
+        d2_new = jnp.sum((x - cents[i - 1]) ** 2, axis=1)
+        mind2 = jnp.minimum(mind2, d2_new)
+        key, sub = jax.random.split(key)
+        p = mind2 / jnp.maximum(jnp.sum(mind2), 1e-30)
+        idx = jax.random.choice(sub, n, p=p)
+        cents = cents.at[i].set(x[idx])
+        return cents, key, mind2
+
+    mind2 = jnp.full((n,), jnp.inf, x.dtype)
+    cents, _, _ = jax.lax.fori_loop(1, k, body, (cents0, key, mind2))
+    return cents
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(
+    key: jax.Array, x: jax.Array, k: int, iters: int = 25
+) -> tuple[jax.Array, jax.Array]:
+    """Lloyd's algorithm. Returns (labels (n,), centroids (k, d)).
+
+    Empty clusters keep their previous centroid (standard fix; keeps the
+    update well-defined under jit).
+    """
+    x = x.astype(jnp.float32)
+    cents = kmeans_plus_plus_init(key, x, k)
+
+    def step(cents, _):
+        d2 = _pairwise_sqdist(x, cents)
+        assign = jnp.argmin(d2, axis=1)
+        onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)      # (n, k)
+        counts = jnp.sum(onehot, axis=0)                        # (k,)
+        sums = onehot.T @ x                                     # (k, d)
+        new = jnp.where(
+            counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], cents
+        )
+        return new, None
+
+    cents, _ = jax.lax.scan(step, cents, None, length=iters)
+    labels = jnp.argmin(_pairwise_sqdist(x, cents), axis=1).astype(jnp.int32)
+    return labels, cents
+
+
+def kmeans_objective(x: jax.Array, labels: jax.Array, cents: jax.Array) -> jax.Array:
+    """Sum of squared distances to assigned centroids (inertia)."""
+    return jnp.sum(jnp.sum((x - cents[labels]) ** 2, axis=1))

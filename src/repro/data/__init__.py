@@ -1,0 +1,19 @@
+from .synthetic import (
+    cassini,
+    dataset_by_name,
+    gaussians,
+    shapes,
+    smiley,
+    three_circles,
+    two_moons,
+)
+
+__all__ = [
+    "two_moons",
+    "three_circles",
+    "cassini",
+    "gaussians",
+    "shapes",
+    "smiley",
+    "dataset_by_name",
+]

@@ -1,0 +1,15 @@
+from .sharding import (
+    axis_rules,
+    constrain,
+    current_rules,
+    logical_to_spec,
+    set_axis_rules,
+)
+
+__all__ = [
+    "axis_rules",
+    "constrain",
+    "current_rules",
+    "logical_to_spec",
+    "set_axis_rules",
+]

@@ -1,0 +1,99 @@
+"""Logical-axis sharding rules (flax-linen-style, dependency-free).
+
+Model code annotates activations/params with *logical* axis names
+("batch", "seq", "embed", "heads", "kv_heads", "mlp", "vocab", "experts",
+"expert_mlp", "layers", ...). A rules table maps logical names to mesh axes.
+Outside a rules context (CPU smoke tests) every constraint is the identity.
+
+The production rules (launch/mesh.py) are Megatron-style:
+    batch   -> ("pod", "data")        heads/kv_heads/mlp/vocab/experts -> "model"
+with per-cell overrides decided by the launcher (e.g. sequence-parallel KV
+cache for long-context decode).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Optional, Sequence, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+MeshAxis = Union[None, str, tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _get() -> Optional[dict[str, MeshAxis]]:
+    return getattr(_state, "rules", None)
+
+
+def set_axis_rules(rules: Optional[Mapping[str, MeshAxis]]) -> None:
+    _state.rules = dict(rules) if rules is not None else None
+
+
+def current_rules() -> Optional[dict[str, MeshAxis]]:
+    return _get()
+
+
+def naive_mode() -> bool:
+    """REPRO_NAIVE=1 disables the beyond-baseline optimizations (grouped-QKV
+    attention, flash decoding, shard_map EP MoE) so §Perf can measure the
+    naive baseline and the optimized version under identical accounting."""
+    import os
+    return os.environ.get("REPRO_NAIVE", "0") == "1"
+
+
+def set_active_mesh(mesh) -> None:
+    _state.mesh = mesh
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[Mapping[str, MeshAxis]], mesh=None):
+    prev = _get()
+    prev_mesh = current_mesh()
+    set_axis_rules(rules)
+    if mesh is not None:
+        set_active_mesh(mesh)
+    try:
+        yield
+    finally:
+        set_axis_rules(prev)
+        set_active_mesh(prev_mesh)
+
+
+def logical_to_spec(names: Sequence[Optional[str]]) -> P:
+    """Resolve a tuple of logical axis names to a PartitionSpec."""
+    rules = _get() or {}
+    resolved = []
+    used: set = set()
+
+    def dedup(axis):
+        # a mesh axis may appear at most once in a PartitionSpec
+        if axis is None:
+            return None
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+        keep = tuple(a for a in axes if a not in used)
+        used.update(keep)
+        if not keep:
+            return None
+        return keep[0] if len(keep) == 1 else keep
+
+    for n in names:
+        resolved.append(dedup(rules.get(n)) if n is not None else None)
+    return P(*resolved)
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """with_sharding_constraint via logical names; identity without rules."""
+    if _get() is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, logical_to_spec(names))
+    except (ValueError, RuntimeError):
+        # no mesh context (e.g. abstract tracing without mesh) — best effort
+        return x

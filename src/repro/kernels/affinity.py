@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: fused affinity-matrix + degree construction.
+
+TPU adaptation of the paper's ``AffinityMatrix`` + ``RowSum`` CUDA kernels
+(DESIGN.md §2). One HBM sweep produces both the (n, n) affinity tile grid and
+the degree vector D — the paper's separate RowSum kernel (an extra O(n²) read)
+is fused into the tile epilogue (optimization O1a).
+
+Grid: (n/TM, n/TN); each step loads a (TM, m) row-slab and a (TN, m) col-slab
+of the (row-normalized) input into VMEM, runs the (TM, m)·(m, TN) product on
+the MXU, applies the similarity transform on the VPU, masks the diagonal /
+padding, writes the A tile, and accumulates the partial row-sums into D.
+
+Tile sizes default to 256×256 (512 KiB f32 per A tile — comfortably inside
+a ~16 MiB VMEM budget together with the two input slabs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _affinity_kernel(
+    xr_ref, xc_ref, sqr_ref, sqc_ref,  # inputs
+    a_ref, d_ref,                      # outputs
+    *, kind: str, n: int, tm: int, tn: int, inv_two_sigma_sq: float,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    xr = xr_ref[...]                   # (TM, m) row slab
+    xc = xc_ref[...]                   # (TN, m) col slab
+    dot = jax.lax.dot_general(
+        xr, xc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                  # (TM, TN) on the MXU
+
+    if kind == "cosine":
+        a = dot
+    elif kind == "cosine_shifted":
+        a = 0.5 * (1.0 + dot)
+    elif kind == "rbf":
+        d2 = sqr_ref[...] + sqc_ref[...].T - 2.0 * dot   # (TM,1)+(1,TN)
+        a = jnp.exp(-jnp.maximum(d2, 0.0) * inv_two_sigma_sq)
+    else:
+        raise ValueError(kind)
+
+    # global row/col ids for diagonal + padding masks
+    rows = i * tm + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 0)
+    cols = j * tn + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 1)
+    valid = (rows != cols) & (rows < n) & (cols < n)
+    a = jnp.where(valid, a, 0.0)
+
+    a_ref[...] = a.astype(a_ref.dtype)
+
+    # fused RowSum: accumulate partial degrees across the col-grid dimension
+    partial = jnp.sum(a, axis=1, keepdims=True)          # (TM, 1)
+    @pl.when(j == 0)
+    def _init():
+        d_ref[...] = partial.astype(d_ref.dtype)
+
+    @pl.when(j != 0)
+    def _acc():
+        d_ref[...] += partial.astype(d_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "sigma", "tm", "tn", "interpret", "out_dtype"),
+)
+def affinity_and_degree(
+    xn: jax.Array,
+    *,
+    kind: str = "cosine_shifted",
+    sigma: float = 1.0,
+    tm: int = 256,
+    tn: int = 256,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (A (n, n), D (n,)) from pre-normalized features ``xn`` (n, m).
+
+    For ``kind='rbf'`` pass the *raw* features and a bandwidth ``sigma``;
+    for the cosine kinds pass L2-row-normalized features.
+    """
+    n, m = xn.shape
+    n_pad = pl.cdiv(n, max(tm, tn)) * max(tm, tn)
+    if n_pad != n:
+        xn = jnp.pad(xn, ((0, n_pad - n), (0, 0)))
+    x32 = xn.astype(jnp.float32)
+    sq = jnp.sum(x32 * x32, axis=1, keepdims=True)       # (n_pad, 1)
+
+    grid = (n_pad // tm, n_pad // tn)
+    kernel = functools.partial(
+        _affinity_kernel,
+        kind=kind, n=n, tm=tm, tn=tn,
+        inv_two_sigma_sq=float(1.0 / (2.0 * sigma * sigma)),
+    )
+    a, d = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, m), lambda i, j: (i, 0)),   # row slab
+            pl.BlockSpec((tn, m), lambda i, j: (j, 0)),   # col slab
+            pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),   # row sq-norms
+            pl.BlockSpec((tn, 1), lambda i, j: (j, 0)),   # col sq-norms
+        ],
+        out_specs=[
+            pl.BlockSpec((tm, tn), lambda i, j: (i, j)),  # A tile
+            pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),   # degree (acc over j)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, n_pad), out_dtype),
+            jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x32, x32, sq, sq)
+    return a[:n, :n], d[:n, 0]

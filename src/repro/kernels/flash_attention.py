@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: causal flash attention (online-softmax, GQA-aware).
+
+EXPERIMENTS.md §Perf identifies the (s, s) f32 score chains as the dominant
+memory term of every 4k-train / 32k-prefill cell; this kernel computes
+attention in ONE HBM sweep of K/V per query block — scores never leave VMEM.
+
+Layout: grid (b·h, nq, nk) with the KV dimension minor (sequential on TPU),
+carrying the online-softmax state (m, l, acc) in VMEM scratch across the
+nk steps of each (bh, iq) program:
+
+    m' = max(m, rowmax(S))          S = Q_blk K_blkᵀ · scale  (MXU)
+    l' = l·e^{m-m'} + rowsum(e^{S-m'})
+    acc' = acc·e^{m-m'} + e^{S-m'} V_blk
+    out  = acc / l                  (epilogue, at ik == nk-1)
+
+GQA: query heads are grouped; the K/V BlockSpec index_map divides the
+grid's bh coordinate by the group size, so kv heads are never repeated in
+HBM (matches opt H1 of the jnp path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale: float, causal: bool, bq: int, bk: int,
+                  seq: int, nk: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                   # (bq, d)
+    k = k_ref[0]                                   # (bk, d)
+    v = v_ref[0]                                   # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_ids = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_ids = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_ids < seq                              # kv padding
+    if causal:
+        mask &= k_ids <= q_ids
+    s = jnp.where(mask, s, -jnp.inf)
+
+    m_prev = m_scr[...]                             # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    # rows with no valid key yet keep m = -inf; guard the exp
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr + pv
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,           # (bh, s, d)  — batch*heads flattened
+    k: jax.Array,           # (bkv, s, d) — batch*kv_heads flattened
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, s, d = q.shape
+    bkv = k.shape[0]
+    assert bh % bkv == 0, "query heads must be a multiple of kv heads"
+    rep = bh // bkv
+    scale = 1.0 / (d ** 0.5)
+
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    s_pad_q = pl.cdiv(s, bq) * bq
+    s_pad_k = pl.cdiv(s, bk) * bk
+    if s_pad_q != s:
+        q = jnp.pad(q, ((0, 0), (0, s_pad_q - s), (0, 0)))
+    if s_pad_k != s:
+        k = jnp.pad(k, ((0, 0), (0, s_pad_k - s), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, s_pad_k - s), (0, 0)))
+    nq = s_pad_q // bq
+    nk = s_pad_k // bk
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, seq=s, nk=nk),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, rep=rep: (h // rep, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, rep=rep: (h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s_pad_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :s]

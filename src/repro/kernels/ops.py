@@ -1,0 +1,62 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On non-TPU backends (this container is CPU-only) the kernels execute in
+``interpret=True`` mode — the kernel body runs in Python/XLA per grid step,
+which validates correctness of the exact TPU program. On a real TPU the same
+calls lower to Mosaic. ``force_reference`` routes to the pure-jnp oracle
+(used by benchmarks to compare fused-kernel vs unfused-reference HLO).
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .affinity import affinity_and_degree as _affinity_pallas
+from .kmeans_assign import kmeans_assign as _assign_pallas
+from .power_step import degree_normalized_matvec as _dnmv_pallas
+from .power_step import power_step as _power_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def affinity_and_degree(xn, *, kind="cosine_shifted", sigma=1.0,
+                        tm=256, tn=256, force_reference=False):
+    """Fused A + D build (paper kernels 1-2). See kernels/affinity.py."""
+    if force_reference:
+        return ref.affinity_and_degree_ref(xn, kind=kind, sigma=sigma)
+    return _affinity_pallas(
+        xn, kind=kind, sigma=sigma, tm=tm, tn=tn, interpret=_interpret()
+    )
+
+
+def degree_normalized_matvec(a, v, d, *, tm=256, tn=256, force_reference=False):
+    """u = (A v)/d — fused paper kernels 3+6 (W never materialized)."""
+    if force_reference:
+        return ref.degree_normalized_matvec_ref(a, v, d)
+    return _dnmv_pallas(a, v, d, tm=tm, tn=tn, interpret=_interpret())
+
+
+def power_step(a, v, d, *, tm=256, tn=256, force_reference=False):
+    """v' = W v / ||W v||_1 — one full paper iteration (kernels 6+4+5)."""
+    if force_reference:
+        return ref.power_step_ref(a, v, d)
+    return _power_pallas(a, v, d, tm=tm, tn=tn, interpret=_interpret())
+
+
+def kmeans_assign(x, cents, *, tm=512, force_reference=False):
+    """k-means assignment (labels, sq-dists)."""
+    if force_reference:
+        return ref.kmeans_assign_ref(x, cents)
+    return _assign_pallas(x, cents, tm=tm, interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=512, block_k=512,
+                    force_reference=False):
+    """Causal flash attention, GQA-aware (LM-substrate hot-spot kernel)."""
+    from .flash_attention import flash_attention as _flash_pallas
+    if force_reference:
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    return _flash_pallas(q, k, v, causal=causal, block_q=block_q,
+                         block_k=block_k, interpret=_interpret())

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: fused power-iteration step.
+
+TPU adaptation of the paper's ``Multiply`` + ``Reduction`` + ``Norm`` CUDA
+kernels (DESIGN.md §2). Computes in ONE sweep of A:
+
+    u = (A @ v) / d          (the degree-normalized matvec — note that
+                              W v = (D^-1 A) v = D^-1 (A v), so W is never
+                              materialized: the paper's NormMatrix kernel
+                              and its O(n^2) extra read+write disappear — O1b)
+    partial L1 mass of u     (per row-tile, combined on the VPU afterwards)
+
+The final scalar division v_{t+1} = u / ||u||_1 is an O(n) epilogue outside
+the kernel (the tiny combine the paper does with its tree-Reduction kernel;
+on TPU this is a trivial jnp.sum — the CUDA interleaved-addressing pattern
+has no TPU analogue, see DESIGN.md §8).
+
+Grid: (n/TM, n/TN), accumulating the matvec across the col-grid dimension j
+(TPU grid order is sequential, minor-to-major, so revisiting the same output
+block is the idiomatic accumulation pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _power_step_kernel(a_ref, v_ref, d_ref, u_ref, *, nj: int):
+    j = pl.program_id(1)
+
+    a = a_ref[...]                       # (TM, TN) tile of A
+    v = v_ref[...]                       # (TN, 1) slice of v
+    partial = jax.lax.dot_general(
+        a, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                    # (TM, 1)
+
+    @pl.when(j == 0)
+    def _init():
+        u_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        u_ref[...] += partial
+
+    # last col-step: normalize the accumulated row block by the degree
+    @pl.when(j == nj - 1)
+    def _norm():
+        d = d_ref[...]                   # (TM, 1)
+        u_ref[...] = u_ref[...] / jnp.maximum(d, 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "interpret"))
+def degree_normalized_matvec(
+    a: jax.Array,
+    v: jax.Array,
+    d: jax.Array,
+    *,
+    tm: int = 256,
+    tn: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """u = (A @ v) / d, one fused HBM sweep of A. Shapes: (n,n), (n,), (n,)."""
+    n = a.shape[0]
+    blk = max(tm, tn)
+    n_pad = pl.cdiv(n, blk) * blk
+    if n_pad != n:
+        a = jnp.pad(a, ((0, n_pad - n), (0, n_pad - n)))
+        v = jnp.pad(v, (0, n_pad - n))
+        d = jnp.pad(d, (0, n_pad - n), constant_values=1.0)
+
+    grid = (n_pad // tm, n_pad // tn)
+    u = pl.pallas_call(
+        functools.partial(_power_step_kernel, nj=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+            pl.BlockSpec((tn, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
+        interpret=interpret,
+    )(a.astype(a.dtype), v.astype(jnp.float32)[:, None],
+      d.astype(jnp.float32)[:, None])
+    return u[:n, 0]
+
+
+def power_step(
+    a: jax.Array, v: jax.Array, d: jax.Array, *, tm: int = 256, tn: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Full paper power step: v_{t+1} = (W v) / ||W v||_1 with W = D^-1 A."""
+    u = degree_normalized_matvec(a, v, d, tm=tm, tn=tn, interpret=interpret)
+    return u / jnp.maximum(jnp.sum(jnp.abs(u)), 1e-30)

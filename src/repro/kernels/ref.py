@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def affinity_and_degree_ref(
+    xn: jax.Array, *, kind: str = "cosine_shifted", sigma: float = 1.0
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for kernels.affinity.affinity_and_degree."""
+    x = xn.astype(jnp.float32)
+    n = x.shape[0]
+    if kind in ("cosine", "cosine_shifted"):
+        a = x @ x.T
+        if kind == "cosine_shifted":
+            a = 0.5 * (1.0 + a)
+    elif kind == "rbf":
+        sq = jnp.sum(x * x, axis=1)
+        d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * (x @ x.T), 0.0)
+        a = jnp.exp(-d2 / (2.0 * sigma * sigma))
+    else:
+        raise ValueError(kind)
+    a = a * (1.0 - jnp.eye(n, dtype=a.dtype))
+    return a, jnp.sum(a, axis=1)
+
+
+def degree_normalized_matvec_ref(
+    a: jax.Array, v: jax.Array, d: jax.Array
+) -> jax.Array:
+    """Oracle for kernels.power_step.degree_normalized_matvec."""
+    u = a.astype(jnp.float32) @ v.astype(jnp.float32)
+    return u / jnp.maximum(d.astype(jnp.float32), 1e-30)
+
+
+def power_step_ref(a: jax.Array, v: jax.Array, d: jax.Array) -> jax.Array:
+    """Oracle for kernels.power_step.power_step."""
+    u = degree_normalized_matvec_ref(a, v, d)
+    return u / jnp.maximum(jnp.sum(jnp.abs(u)), 1e-30)
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """Oracle for kernels.flash_attention: q (bh, s, d), k/v (bkv, s, d)."""
+    bh, s, d = q.shape
+    rep = bh // k.shape[0]
+    kk = jnp.repeat(k, rep, axis=0).astype(jnp.float32)
+    vv = jnp.repeat(v, rep, axis=0).astype(jnp.float32)
+    logits = jnp.einsum("hsd,htd->hst", q.astype(jnp.float32), kk)
+    logits = logits / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hst,htd->hsd", probs, vv).astype(q.dtype)
+
+
+def kmeans_assign_ref(
+    x: jax.Array, cents: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for kernels.kmeans_assign.kmeans_assign."""
+    x = x.astype(jnp.float32)
+    c = cents.astype(jnp.float32)
+    xx = jnp.sum(x * x, axis=1, keepdims=True)
+    cc = jnp.sum(c * c, axis=1)[None, :]
+    d2 = xx + cc - 2.0 * (x @ c.T)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32), jnp.min(d2, axis=1)

@@ -1,0 +1,451 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- multi-pod dry-run: lower + compile every (arch x shape x mesh) cell ---
+# (the two lines above MUST precede any other import — jax locks the device
+# count at first init)
+
+import argparse        # noqa: E402
+import json            # noqa: E402
+import math            # noqa: E402
+import re              # noqa: E402
+import time            # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import (  # noqa: E402
+    ARCH_IDS, SHAPE_CELLS, TrainConfig, get_config)
+from ..distributed.sharding import axis_rules, logical_to_spec  # noqa: E402
+from ..models import (  # noqa: E402
+    decode_inputs_specs, get_api, train_batch_specs)
+from ..train import adamw_init, build_train_step  # noqa: E402
+from ..train.train_step import build_decode_step, build_prefill  # noqa: E402
+from .hlo_analysis import analyze_compiled  # noqa: E402
+from .mesh import build_rules, make_production_mesh, param_shardings  # noqa: E402
+
+# v5e-class hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in post-optimization HLO.
+
+    Convention: for each collective instruction line we sum the *operand*
+    shapes (everything after the opcode); this is the per-device payload
+    entering the collective.
+    """
+    per_op = {op: 0 for op in COLLECTIVE_OPS}
+    counts = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for op in COLLECTIVE_OPS:
+            # match "= TYPE[...] op-name(" or fusion-wrapped "op-name."
+            marker = f" {op}("
+            start_marker = f"{op}-start("
+            if marker not in stripped and start_marker not in stripped:
+                continue
+            idx = stripped.find(marker)
+            if idx < 0:
+                idx = stripped.find(start_marker)
+            args = stripped[idx:]
+            shapes = _SHAPE_RE.findall(args)
+            if not shapes:
+                # operands given as %refs only; fall back to the result shape
+                shapes = _SHAPE_RE.findall(stripped.split("=")[1] if "="
+                                           in stripped else stripped)[:1]
+            per_op[op] += sum(_shape_bytes(d, s) for d, s in shapes)
+            counts[op] += 1
+            break
+    total = sum(per_op.values())
+    return {"per_op": per_op, "counts": counts, "total_bytes": total}
+
+
+def model_flops(cfg, cell) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode: per step."""
+    api = get_api(cfg)
+    params = jax.eval_shape(lambda: api.init_params(jax.random.key(0), cfg))
+    n_total = sum(math.prod(x.shape) for x in jax.tree.leaves(params))
+    n = n_total
+    if cfg.moe is not None:
+        m = cfg.moe
+        routed = sum(
+            math.prod(x.shape)
+            for k in ("wg", "wu", "wd")
+            for x in jax.tree.leaves(params["moe_layers"]["moe"][k])
+        ) if "moe_layers" in params else 0
+        # keep top_k of n_experts of the routed weights active
+        n = n_total - routed + routed * m.top_k / m.n_experts
+    tokens = (cell.global_batch * cell.seq_len if cell.kind != "decode"
+              else cell.global_batch)  # decode: one token per sequence
+    mult = 6.0 if cell.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def _applicable(cfg, cell) -> tuple[bool, str]:
+    if cell.name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention arch: 500k-token decode needs "
+                       "sub-quadratic attention (DESIGN.md §5)")
+    return True, ""
+
+
+def _batch_shardings(batch_specs_tree, mesh):
+    def spec_for(path_leaf_name, leaf):
+        if leaf.ndim >= 1:
+            names = ["batch"] + [None] * (leaf.ndim - 1)
+            return NamedSharding(mesh, logical_to_spec(names))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(lambda l: spec_for(None, l), batch_specs_tree)
+
+
+def _cache_shardings(cache_abs, cache_spec_tree, mesh):
+    spec_leaves = jax.tree.leaves(
+        cache_spec_tree, is_leaf=lambda s: isinstance(s, tuple))
+    abs_leaves, treedef = jax.tree_util.tree_flatten(cache_abs)
+    shardings = [
+        NamedSharding(mesh, logical_to_spec(s)) for s in spec_leaves]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def microbatch_for(cfg, cell, multi_pod: bool) -> int:
+    if cell.kind != "train":
+        return 0
+    # Fewer, larger microbatches cut gradient-accumulation traffic (each
+    # accumulation pass reads+writes the full f32 grad buffer — §Perf D2:
+    # deepseek memory term −22% going 16 -> 4). Bounded below by activation
+    # memory: granite-34b / llama4 need 16 slices to stay inside ~14 GB temp.
+    # Slices must stay divisible by total DP (16 single-pod, 32 multi-pod).
+    heavy = {"granite-34b", "llama4-maverick-400b-a17b"}
+    if cfg.arch_id in heavy:
+        return 8 if multi_pod else 16
+    if os.environ.get("REPRO_NAIVE", "0") == "1":
+        return 8 if multi_pod else 16    # the pre-D2 baseline
+    return 4 if cfg.arch_id.startswith("deepseek") else 8
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    cell = next(c for c in SHAPE_CELLS if c.name == shape_name)
+    api = get_api(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = math.prod(mesh.devices.shape)
+
+    ok, reason = _applicable(cfg, cell)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips, "status": "skipped", "reason": reason,
+    }
+    if not ok:
+        return result
+
+    rules = build_rules(cfg, cell, multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh, axis_rules(rules, mesh=mesh):
+        params_abs = jax.eval_shape(
+            lambda: api.init_params(jax.random.key(0), cfg, jnp.bfloat16))
+        p_shard = param_shardings(mesh, api.param_specs(cfg))
+
+        if cell.kind == "train":
+            tcfg = TrainConfig(seq_len=cell.seq_len,
+                               global_batch=cell.global_batch,
+                               microbatch=microbatch_for(cfg, cell, multi_pod),
+                               compute_dtype="bfloat16",
+                               remat=os.environ.get("REPRO_REMAT", "full"))
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            opt_shard = jax.tree.map(
+                lambda _s, ps: ps, opt_abs.mu, p_shard)
+            from ..train.optimizer import AdamWState
+            opt_sharding = AdamWState(
+                step=NamedSharding(mesh, P()), mu=opt_shard, nu=opt_shard)
+            batch_abs = train_batch_specs(cfg, cell.global_batch, cell.seq_len)
+            b_shard = _batch_shardings(batch_abs, mesh)
+            step = build_train_step(cfg, tcfg)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, opt_sharding, b_shard),
+                             out_shardings=(p_shard, opt_sharding, None))
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        elif cell.kind == "prefill":
+            max_len = cell.seq_len + (cfg.n_prefix_tokens or 0)
+            fn = build_prefill(cfg, max_len)
+            batch_abs = train_batch_specs(cfg, cell.global_batch, cell.seq_len)
+            batch_abs.pop("labels")
+            b_shard = _batch_shardings(batch_abs, mesh)
+            jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:  # decode
+            cache_len = cell.seq_len + (cfg.n_prefix_tokens or 0)
+            inputs = decode_inputs_specs(cfg, cell.global_batch, cache_len)
+            cache_sh = _cache_shardings(inputs["cache"], api.cache_specs(cfg),
+                                        mesh)
+            tok_sh = NamedSharding(mesh, logical_to_spec(["batch", None]))
+            pos_sh = NamedSharding(mesh, P())
+            extras = inputs.get("extras")
+            fn = build_decode_step(cfg)
+            if extras is not None:
+                ex_sh = {"enc_out": NamedSharding(
+                    mesh, logical_to_spec(["batch", None, None]))}
+                jitted = jax.jit(fn, in_shardings=(p_shard, tok_sh, cache_sh,
+                                                   pos_sh, ex_sh))
+                lowered = jitted.lower(params_abs, inputs["tokens"],
+                                       inputs["cache"], inputs["pos"], extras)
+            else:
+                jitted = jax.jit(fn, in_shardings=(p_shard, tok_sh, cache_sh,
+                                                   pos_sh))
+                lowered = jitted.lower(params_abs, inputs["tokens"],
+                                       inputs["cache"], inputs["pos"])
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    # XLA's aggregate numbers (NO trip-count scaling — kept for reference)
+    cost = compiled.cost_analysis()
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        }
+    except Exception as e:  # pragma: no cover
+        mem_d = {"error": str(e)}
+
+    # trip-count-aware analysis (hlo_analysis.py) — the roofline source
+    t0 = time.time()
+    acc = analyze_compiled(compiled)
+    t_analyze = time.time() - t0
+    flops = acc["flops"]
+    bytes_accessed = acc["bytes"]
+    coll_bytes = acc["collective_bytes"]
+
+    # --- roofline terms (per-chip seconds; the compiled module is the
+    # per-device SPMD program, so its costs are already per-device)
+    mf = model_flops(cfg, cell)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)), key=lambda kv: kv[1])[0]
+
+    result.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "analyze_s": round(t_analyze, 2),
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": coll_bytes,
+        "collectives": {"per_op": acc["collective_per_op"],
+                        "counts": acc["collective_counts"]},
+        "xla_cost_analysis": {"flops": xla_flops, "bytes": xla_bytes,
+                              "note": "while bodies counted once by XLA"},
+        "memory_analysis": mem_d,
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": dominant,
+        },
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / n_chips,
+        "useful_compute_ratio": (mf / n_chips) / flops if flops else 0.0,
+    })
+    if verbose:
+        print(json.dumps({k: result[k] for k in
+                          ("arch", "shape", "mesh", "status", "compile_s")},
+                         indent=None))
+        print(f"  memory_analysis: {mem_d}")
+        print(f"  cost: flops/dev={flops:.3e} bytes/dev={bytes_accessed:.3e} "
+              f"coll/dev={coll_bytes:.3e}")
+        print(f"  roofline: compute={compute_s*1e3:.2f}ms "
+              f"memory={memory_s*1e3:.2f}ms "
+              f"collective={collective_s*1e3:.2f}ms dominant={dominant} "
+              f"useful={result['useful_compute_ratio']:.3f}")
+    return result
+
+
+# ---------------------------------------------------------------------------
+# GPIC cells: the paper's own technique on the production mesh
+# ---------------------------------------------------------------------------
+
+GPIC_CELLS = {
+    # name: (variant, n_points, n_features)
+    "explicit_262k": ("explicit", 262_144, 64),
+    "matrixfree_4m": ("matrixfree", 4_194_304, 64),
+}
+
+
+def dryrun_gpic(shape_name: str, *, multi_pod: bool,
+                verbose: bool = True) -> dict:
+    """Lower + compile distributed GPIC on the production mesh.
+
+    The convergence while-loop has no static trip count, so the analyzer
+    reports [affinity build + ONE power iteration] — the natural per-step
+    unit for a convergence loop (EXPERIMENTS.md §Roofline notes this).
+    """
+    from ..core.distributed import distributed_gpic, distributed_gpic_matrix_free
+
+    variant, n, m = GPIC_CELLS[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = math.prod(mesh.devices.shape)
+    axes = mesh.axis_names  # shard rows over ALL axes (pod, data, model)
+
+    result = {"arch": f"gpic-{variant}", "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16",
+              "chips": n_chips, "status": "skipped", "reason": ""}
+
+    x_abs = jax.ShapeDtypeStruct((n, m), jnp.float32)
+    key_abs = jax.ShapeDtypeStruct((), jnp.uint32)
+    x_sh = NamedSharding(mesh, P(axes))
+    key_sh = NamedSharding(mesh, P())
+
+    naive = os.environ.get("REPRO_NAIVE", "0") == "1"
+    if variant == "explicit":
+        a_dtype = jnp.float32 if naive else jnp.bfloat16   # opt O4
+        fn = lambda x, key: distributed_gpic(
+            x, 4, key=key, mesh=mesh, shard_axes=axes,
+            affinity_kind="cosine_shifted", max_iter=50, a_dtype=a_dtype,
+            fold_shift=not naive)                          # opt O5
+    else:
+        fn = lambda x, key: distributed_gpic_matrix_free(
+            x, 4, key=key, mesh=mesh, shard_axes=axes,
+            affinity_kind="cosine_shifted", max_iter=50)
+
+    t0 = time.time()
+    with mesh:
+        key_abs = jax.eval_shape(lambda: jax.random.key(0))
+        lowered = jax.jit(fn, in_shardings=(x_sh, key_sh)).lower(x_abs, key_abs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {"argument_bytes": mem.argument_size_in_bytes,
+                 "output_bytes": mem.output_size_in_bytes,
+                 "temp_bytes": mem.temp_size_in_bytes}
+    except Exception as e:  # pragma: no cover
+        mem_d = {"error": str(e)}
+    acc = analyze_compiled(compiled)
+    flops, bytes_accessed, coll_bytes = (acc["flops"], acc["bytes"],
+                                         acc["collective_bytes"])
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    # "model flops" for GPIC: affinity 2n²m/P + one matvec 2n²/P (explicit)
+    # or 4nm/P per iteration (matrix-free)
+    if variant == "explicit":
+        mf = (2.0 * n * n * m + 2.0 * n * n) / n_chips
+    else:
+        mf = 8.0 * n * m / n_chips
+    result.update({
+        "status": "ok", "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": coll_bytes,
+        "collectives": {"per_op": acc["collective_per_op"],
+                        "counts": acc["collective_counts"]},
+        "memory_analysis": mem_d,
+        "roofline": {"compute_s": compute_s, "memory_s": memory_s,
+                     "collective_s": collective_s, "dominant": dominant},
+        "model_flops_per_device": mf,
+        "useful_compute_ratio": mf / flops if flops else 0.0,
+        "model_flops_global": mf * n_chips,
+        "note": "cost unit = affinity build + 1 power iteration "
+                "(unknown trip count)",
+    })
+    if verbose:
+        print(f"  gpic-{variant}: compile={t_compile:.1f}s "
+              f"compute={compute_s*1e3:.2f}ms memory={memory_s*1e3:.2f}ms "
+              f"collective={collective_s*1e3:.2f}ms dominant={dominant}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    gpic_names = [f"gpic:{s}" for s in GPIC_CELLS]
+    ap.add_argument("--arch", choices=list(ARCH_IDS) + ["gpic"])
+    ap.add_argument("--shape",
+                    choices=[c.name for c in SHAPE_CELLS] + list(GPIC_CELLS))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--naive", action="store_true",
+                    help="disable beyond-baseline optimizations (REPRO_NAIVE)")
+    args = ap.parse_args()
+    if args.naive:
+        os.environ["REPRO_NAIVE"] = "1"
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = [(a, s.name) for a in ARCH_IDS for s in SHAPE_CELLS]
+        cells += [("gpic", s) for s in GPIC_CELLS]
+    else:
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+            out_path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(out_path):
+                print(f"[skip existing] {tag}")
+                continue
+            print(f"=== {tag} ===", flush=True)
+            try:
+                if arch == "gpic":
+                    res = dryrun_gpic(shape, multi_pod=mp)
+                else:
+                    res = dryrun_cell(arch, shape, multi_pod=mp)
+            except Exception as e:
+                res = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "error", "error": f"{type(e).__name__}: {e}"}
+                failures.append(tag)
+                print(f"  ERROR {type(e).__name__}: {e}", flush=True)
+            with open(out_path, "w") as f:
+                json.dump(res, f, indent=2)
+    if failures:
+        print(f"\nFAILED cells: {failures}")
+        raise SystemExit(1)
+    print("\nall requested cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,397 @@
+"""Trip-count-aware HLO cost analysis (the roofline engine).
+
+XLA's ``compiled.cost_analysis()`` counts every while-loop body ONCE —
+useless for scan-over-layers/microbatch models (measured: a 10-step scan of
+matmuls reports the flops of one matmul). This module parses the
+post-optimization HLO text and computes
+
+    flops             2·M·N·K for dots (+1/elem for fused arithmetic)
+    hbm bytes         operand+result bytes of non-fused instructions
+    collective bytes  operand bytes of all-gather/all-reduce/reduce-scatter/
+                      all-to-all/collective-permute
+
+with every while body multiplied by its ``known_trip_count`` backend config
+(nested loops compose multiplicatively). Loops with unknown trip count
+multiply by 1 — i.e. per-iteration cost (the natural unit for convergence
+loops like GPIC's power iteration).
+
+Conventions follow HloCostAnalysis closely enough for roofline purposes:
+fusions count only their boundary IO for bytes but their full interior for
+flops; parameters/tuples/GTEs/bitcasts are free.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|s4|"
+    r"u4|pred)\[([0-9,]*)\]")
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?.+?\)?)\s+([\w\-]+)\((.*)$")
+
+_CALLED_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_REF_RE = re.compile(r"%([\w.\-]+)")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "log", "tanh", "negate", "abs", "rsqrt", "sqrt", "select",
+    "compare", "and", "or", "xor", "not", "floor", "ceil", "sign",
+    "cosine", "sine", "atan2", "remainder", "clamp", "expm1", "log1p",
+    "logistic", "round-nearest-afz", "round-nearest-even", "erf",
+}
+
+# dtype converts are free: on TPU they fuse into producers/consumers (bf16
+# dots are MXU-native); the CPU backend materializes f32 copies around every
+# bf16 dot, which would systematically distort the memory roofline term.
+
+FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id",
+    "rng-get-and-update-state", "opt-barrier", "rng-bit-generator",
+    "convert",
+}
+
+COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute"}
+_COLLECTIVE_OPCODES = COLLECTIVES | {c + "-start" for c in COLLECTIVES}
+
+MOVEMENT_OPS = {
+    "slice", "dynamic-slice", "dynamic-update-slice", "pad", "concatenate",
+    "gather", "scatter", "transpose", "reshape", "broadcast", "reverse",
+    "copy", "copy-start", "copy-done", "reduce-window", "sort", "custom-call",
+    "select-and-scatter", "clz", "popcnt",
+}
+
+
+def _bytes_of_shapes(text: str) -> int:
+    return sum(
+        _DTYPE_BYTES[d] * (math.prod(int(x) for x in dims.split(",")) if dims
+                           else 1)
+        for d, dims in _SHAPE_RE.findall(text))
+
+
+def _first_shape(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    d, dims = m.groups()
+    return d, ([int(x) for x in dims.split(",")] if dims else [])
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_per_op: dict = field(default_factory=dict)
+    collective_counts: dict = field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.collective_bytes += o.collective_bytes
+        for k, v in o.collective_per_op.items():
+            self.collective_per_op[k] = self.collective_per_op.get(k, 0) + v
+        for k, v in o.collective_counts.items():
+            self.collective_counts[k] = self.collective_counts.get(k, 0) + v
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.bytes * m, self.collective_bytes * m,
+                    {k: v * m for k, v in self.collective_per_op.items()},
+                    {k: v * m for k, v in self.collective_counts.items()})
+
+
+@dataclass
+class _Instr:
+    name: str
+    result_text: str
+    opcode: str
+    args_text: str
+    is_root: bool = False
+
+
+def _split_computations(text: str):
+    """name -> (list of _Instr, symbol table name -> result_text)."""
+    comps: dict[str, list[_Instr]] = {}
+    cur = None
+    for line in text.splitlines():
+        clean = re.sub(r"/\*.*?\*/", "", line)   # strip /*index=N*/ comments
+        header = re.match(
+            r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\s*\{\s*$", clean)
+        if header and " = " not in clean.split("->")[0]:
+            cur = header.group(1)
+            comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            name, result_text, opcode, args_text = mi.groups()
+            comps[cur].append(_Instr(name, result_text, opcode, args_text,
+                                     is_root=line.lstrip().startswith("ROOT")))
+    return comps
+
+
+def _operand_args(args_text: str) -> str:
+    """The operand list — everything up to the matching close paren."""
+    depth = 1
+    for i, ch in enumerate(args_text):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return args_text[:i]
+    return args_text
+
+
+def analyze(text: str, *, entry: str | None = None) -> Cost:
+    comps = _split_computations(text)
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+        entry = m.group(1) if m else next(iter(comps))
+
+    symtab: dict[str, dict[str, str]] = {
+        cname: {i.name: i.result_text for i in instrs}
+        for cname, instrs in comps.items()
+    }
+    memo: dict[str, Cost] = {}
+    fusion_input_memo: dict[str, float] = {}
+
+    SLICE_OPS = {"slice", "dynamic-slice", "gather", "get-tuple-element",
+                 "bitcast", "reshape", "broadcast", "convert", "copy",
+                 "transpose"}
+
+    _PURE_CONVERT_OPS = {"parameter", "convert", "bitcast", "tuple",
+                         "get-tuple-element"}
+    pure_convert_memo: dict[str, bool] = {}
+
+    def is_pure_convert_fusion(fname: str) -> bool:
+        """wrapped_convert-style fusions (dtype cast only) are free — the
+        CPU backend materializes f32 copies around bf16 dots that TPU's MXU
+        consumes natively."""
+        if fname not in pure_convert_memo:
+            instrs = comps.get(fname, [])
+            pure_convert_memo[fname] = bool(instrs) and all(
+                i.opcode in _PURE_CONVERT_OPS for i in instrs)
+        return pure_convert_memo[fname]
+
+    def fusion_output_bytes(fname: str, result_text: str) -> float:
+        """Fusions rooted in dynamic-update-slice write only the update
+        region in place (the scan's per-layer cache/grad-accumulator write),
+        not the whole loop-carried buffer."""
+        instrs = comps.get(fname, [])
+        root = next((i for i in instrs if i.is_root), instrs[-1] if instrs
+                    else None)
+        if root is not None and root.opcode == "dynamic-update-slice":
+            table = {i.name: i.result_text for i in instrs}
+            refs = _REF_RE.findall(_operand_args(root.args_text))
+            if len(refs) >= 2 and refs[1] in table:
+                return _bytes_of_shapes(table[refs[1]])
+        return _bytes_of_shapes(result_text)
+
+    def fusion_input_bytes(fname: str) -> float:
+        """Effective bytes READ by a fused computation's parameters.
+
+        HloCostAnalysis convention: a parameter that is only consumed by
+        slice-like ops inside the fusion is charged at the sliced size, not
+        the full (possibly 88-layer-stacked) operand size.
+        """
+        if fname in fusion_input_memo:
+            return fusion_input_memo[fname]
+        instrs = comps.get(fname, [])
+        total = 0.0
+        for p in instrs:
+            if p.opcode != "parameter":
+                continue
+            def users_of(name):
+                return [u for u in instrs
+                        if u.name != name
+                        and re.search(r"%" + re.escape(name) + r"\b",
+                                      u.args_text)]
+
+            def read_bytes(name, depth=0):
+                """Effective read of a value consumed inside the fusion."""
+                if depth > 4:
+                    return None
+                reads = []
+                for u in users_of(name):
+                    if u.opcode in ("slice", "dynamic-slice", "gather"):
+                        reads.append(_bytes_of_shapes(u.result_text))
+                    elif u.opcode == "dynamic-update-slice":
+                        refs = _REF_RE.findall(_operand_args(u.args_text))
+                        if refs and refs[0] == name:
+                            reads.append(0.0)   # in-place buffer: aliased
+                        else:
+                            return None
+                    elif u.opcode in ("convert", "bitcast", "copy"):
+                        sub = read_bytes(u.name, depth + 1)
+                        if sub is None:
+                            return None
+                        reads.append(sub)
+                    else:
+                        return None
+                return sum(reads) if reads else None
+
+            rb = read_bytes(p.name)
+            total += (rb if rb is not None
+                      else _bytes_of_shapes(p.result_text))
+        fusion_input_memo[fname] = total
+        return total
+
+    def operand_bytes(cname: str, operands: str) -> int:
+        total = _bytes_of_shapes(operands)   # inline-typed operands
+        if total:
+            return total
+        table = symtab[cname]
+        for ref in _REF_RE.findall(operands):
+            if ref in table:
+                total += _bytes_of_shapes(table[ref])
+        return total
+
+    def first_operand_shape(cname: str, operands: str):
+        inline = _first_shape(operands)
+        refs = _REF_RE.findall(operands)
+        if inline and not operands.lstrip().startswith("%"):
+            return inline
+        if refs and refs[0] in symtab[cname]:
+            return _first_shape(symtab[cname][refs[0]])
+        return inline
+
+    def comp_cost(cname: str) -> Cost:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = Cost()  # cycle guard
+        total = Cost()
+        for ins in comps.get(cname, []):
+            operands = _operand_args(ins.args_text)
+            attrs = ins.args_text[len(operands):]
+            c = Cost()
+            op = ins.opcode
+
+            if op == "while":
+                body = _CALLED_RE.search(attrs)
+                cond = _COND_RE.search(attrs)
+                trip = 1
+                mt = _TRIP_RE.search(attrs)
+                if mt:
+                    trip = int(mt.group(1))
+                inner = Cost()
+                if body:
+                    inner += comp_cost(body.group(1))
+                if cond:
+                    inner += comp_cost(cond.group(1))
+                c += inner.scaled(trip)
+            elif op in ("call", "conditional", "map", "async-start"):
+                for cc in _CALLED_RE.findall(attrs):
+                    c += comp_cost(cc)
+            elif op == "fusion":
+                called = _CALLED_RE.search(attrs)
+                if called and is_pure_convert_fusion(called.group(1)):
+                    total += Cost()
+                    continue
+                if called:
+                    interior = comp_cost(called.group(1))
+                    c.flops += interior.flops
+                    c.collective_bytes += interior.collective_bytes
+                    for k, v in interior.collective_per_op.items():
+                        c.collective_per_op[k] = (
+                            c.collective_per_op.get(k, 0) + v)
+                    for k, v in interior.collective_counts.items():
+                        c.collective_counts[k] = (
+                            c.collective_counts.get(k, 0) + v)
+                    c.bytes += (fusion_output_bytes(called.group(1),
+                                                    ins.result_text)
+                                + fusion_input_bytes(called.group(1)))
+                else:
+                    c.bytes += (_bytes_of_shapes(ins.result_text)
+                                + operand_bytes(cname, operands))
+            elif op in _COLLECTIVE_OPCODES:
+                base = op.replace("-start", "")
+                ob = operand_bytes(cname, operands)
+                if ob == 0:
+                    ob = _bytes_of_shapes(ins.result_text)
+                c.collective_bytes += ob
+                c.collective_per_op[base] = c.collective_per_op.get(base, 0) + ob
+                c.collective_counts[base] = c.collective_counts.get(base, 0) + 1
+                c.bytes += ob + _bytes_of_shapes(ins.result_text)
+            elif op == "dot":
+                rs = _first_shape(ins.result_text)
+                result_elems = math.prod(rs[1]) if rs else 0
+                lhs = first_operand_shape(cname, operands)
+                k = 1
+                mcd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", attrs)
+                if lhs and mcd and mcd.group(1):
+                    for idx in mcd.group(1).split(","):
+                        i = int(idx)
+                        if i < len(lhs[1]):
+                            k *= lhs[1][i]
+                c.flops += 2.0 * result_elems * k
+                c.bytes += (_bytes_of_shapes(ins.result_text)
+                            + operand_bytes(cname, operands))
+            elif op in ELEMENTWISE:
+                rs = _first_shape(ins.result_text)
+                c.flops += math.prod(rs[1]) if rs else 0
+                c.bytes += (_bytes_of_shapes(ins.result_text)
+                            + operand_bytes(cname, operands))
+            elif op in ("reduce", "reduce-precision"):
+                ob = operand_bytes(cname, operands)
+                fs = first_operand_shape(cname, operands)
+                c.flops += math.prod(fs[1]) if fs else 0
+                c.bytes += ob + _bytes_of_shapes(ins.result_text)
+            elif op in ("slice", "dynamic-slice", "gather"):
+                # read + write only the sliced region, not the full operand
+                c.bytes += 2 * _bytes_of_shapes(ins.result_text)
+            elif op == "dynamic-update-slice":
+                # in-place DUS: read + write the update region only
+                refs = _REF_RE.findall(operands)
+                upd = 0
+                if len(refs) >= 2 and refs[1] in symtab[cname]:
+                    upd = _bytes_of_shapes(symtab[cname][refs[1]])
+                c.bytes += 2 * upd if upd else _bytes_of_shapes(ins.result_text)
+            elif op == "scatter":
+                refs = _REF_RE.findall(operands)
+                upd = sum(_bytes_of_shapes(symtab[cname][r]) for r in refs[1:]
+                          if r in symtab[cname])
+                c.bytes += 2 * upd if upd else _bytes_of_shapes(ins.result_text)
+            elif op == "broadcast":
+                c.bytes += _bytes_of_shapes(ins.result_text)
+            elif op in FREE_OPS:
+                pass
+            elif op in MOVEMENT_OPS:
+                c.bytes += (_bytes_of_shapes(ins.result_text)
+                            + operand_bytes(cname, operands))
+            else:
+                c.bytes += (_bytes_of_shapes(ins.result_text)
+                            + operand_bytes(cname, operands))
+            total += c
+        memo[cname] = total
+        return total
+
+    return comp_cost(entry)
+
+
+def analyze_compiled(compiled) -> dict:
+    cost = analyze(compiled.as_text())
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "collective_bytes": cost.collective_bytes,
+        "collective_per_op": cost.collective_per_op,
+        "collective_counts": cost.collective_counts,
+    }

@@ -1,0 +1,15 @@
+from .model_zoo import (
+    ModelAPI,
+    decode_inputs_specs,
+    get_api,
+    make_train_batch,
+    train_batch_specs,
+)
+
+__all__ = [
+    "ModelAPI",
+    "get_api",
+    "train_batch_specs",
+    "decode_inputs_specs",
+    "make_train_batch",
+]

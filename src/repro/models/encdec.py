@@ -1,0 +1,186 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+Per the assignment the audio frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (b, s_src, d_model). The backbone is
+n_enc_layers of bidirectional self-attention + n_layers decoder layers of
+causal self-attention + cross-attention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from .layers import rms_norm
+
+
+def init_enc_layer(key, cfg: ModelConfig, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_attention(k1, cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": L.init_mlp(k2, cfg, dtype, gated=False),
+    }
+
+
+def init_dec_layer(key, cfg: ModelConfig, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "self_attn": L.init_attention(k1, cfg, dtype),
+        "ln_x": jnp.ones((cfg.d_model,), dtype),
+        "cross_attn": L.init_attention(k2, cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": L.init_mlp(k3, cfg, dtype, gated=False),
+    }
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    ke, k1, k2, kf = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k1, cfg.n_enc_layers)
+    dec_keys = jax.random.split(k2, cfg.n_layers)
+    return {
+        "embed": L.init_embed(ke, cfg, dtype),
+        "enc_layers": jax.vmap(lambda k: init_enc_layer(k, cfg, dtype))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: init_dec_layer(k, cfg, dtype))(dec_keys),
+        "ln_enc": jnp.ones((cfg.d_model,), dtype),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    leaf = lambda s: isinstance(s, tuple)
+    enc = {
+        "ln1": ("embed",), "attn": L.attention_specs(cfg),
+        "ln2": ("embed",), "mlp": L.mlp_specs(gated=False),
+    }
+    dec = {
+        "ln1": ("embed",), "self_attn": L.attention_specs(cfg),
+        "ln_x": ("embed",), "cross_attn": L.attention_specs(cfg),
+        "ln2": ("embed",), "mlp": L.mlp_specs(gated=False),
+    }
+    stack = lambda t: jax.tree.map(lambda s: ("layers",) + tuple(s), t,
+                                   is_leaf=leaf)
+    return {
+        "embed": L.embed_specs(cfg),
+        "enc_layers": stack(enc),
+        "dec_layers": stack(dec),
+        "ln_enc": ("embed",),
+        "ln_f": ("embed",),
+    }
+
+
+def encode(params, cfg: ModelConfig, src_embeds, *, compute_dtype=jnp.bfloat16,
+           remat: str = "full"):
+    h = src_embeds.astype(compute_dtype)
+    positions = jnp.arange(h.shape[1])
+
+    def body(x, lp):
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp)
+        a, _ = L.attention(rms_norm(x, lp["ln1"], cfg.norm_eps), lp["attn"],
+                           cfg, positions=positions, causal=False)
+        x = x + a
+        x = x + L.mlp(rms_norm(x, lp["ln2"], cfg.norm_eps), lp["mlp"])
+        return x, None
+
+    if remat in ("full", "dots"):
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return rms_norm(h, params["ln_enc"].astype(compute_dtype), cfg.norm_eps)
+
+
+def _dec_layer(cfg, x, lp, enc_out, *, positions, cache=None, cache_pos=None):
+    a, nc = L.attention(rms_norm(x, lp["ln1"], cfg.norm_eps), lp["self_attn"],
+                        cfg, positions=positions, cache=cache,
+                        cache_pos=cache_pos)
+    x = x + a
+    c, _ = L.attention(rms_norm(x, lp["ln_x"], cfg.norm_eps), lp["cross_attn"],
+                       cfg, x_kv=enc_out, rope=False)
+    x = x + c
+    x = x + L.mlp(rms_norm(x, lp["ln2"], cfg.norm_eps), lp["mlp"])
+    return x, nc
+
+
+def decode_train(params, cfg: ModelConfig, enc_out, tgt_tokens,
+                 *, compute_dtype=jnp.bfloat16, remat: str = "full"):
+    h = L.embed_tokens(params["embed"], tgt_tokens).astype(compute_dtype)
+    positions = jnp.arange(h.shape[1])
+
+    def body(x, lp):
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp)
+        x, _ = _dec_layer(cfg, x, lp, enc_out, positions=positions)
+        return x, None
+
+    if remat in ("full", "dots"):
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["dec_layers"])
+    h = rms_norm(h, params["ln_f"].astype(compute_dtype), cfg.norm_eps)
+    return L.lm_logits(params["embed"], h.astype(jnp.float32))
+
+
+def forward(params, cfg: ModelConfig, batch, *, compute_dtype=jnp.bfloat16,
+            remat: str = "full"):
+    """batch = {"src_embeds": (b, s_src, d), "tokens": (b, s_tgt)}."""
+    enc_out = encode(params, cfg, batch["src_embeds"],
+                     compute_dtype=compute_dtype, remat=remat)
+    return decode_train(params, cfg, enc_out, batch["tokens"],
+                        compute_dtype=compute_dtype, remat=remat)
+
+
+# ---------------------------------------------------------------------------
+# serving: decoder decode step against cached encoder output
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch, max_len, dtype=jnp.bfloat16):
+    one = L.init_attention_cache(cfg, batch, max_len, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one)
+
+
+def cache_specs(cfg: ModelConfig):
+    leaf = lambda s: isinstance(s, tuple)
+    return jax.tree.map(lambda s: ("layers",) + tuple(s),
+                        L.attention_cache_specs(cfg), is_leaf=leaf)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos, enc_out,
+                *, compute_dtype=jnp.bfloat16):
+    h = L.embed_tokens(params["embed"], tokens).astype(compute_dtype)
+    positions = pos + jnp.arange(tokens.shape[1])
+
+    def body(x, scanned):
+        lp, lc = scanned
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp)
+        x, nc = _dec_layer(cfg, x, lp, enc_out, positions=positions,
+                           cache=lc, cache_pos=pos)
+        return x, nc
+
+    h, new_cache = jax.lax.scan(body, h, (params["dec_layers"], cache))
+    h = rms_norm(h, params["ln_f"].astype(compute_dtype), cfg.norm_eps)
+    return L.lm_logits(params["embed"], h.astype(jnp.float32)), new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len,
+            *, compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16):
+    """Encode src and prefill the decoder self-attn cache with tgt tokens."""
+    enc_out = encode(params, cfg, batch["src_embeds"],
+                     compute_dtype=compute_dtype)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len, cache_dtype)
+    h = L.embed_tokens(params["embed"], tokens).astype(compute_dtype)
+    positions = jnp.arange(s)
+
+    def body(x, scanned):
+        lp, lc = scanned
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp)
+        x, nc = _dec_layer(cfg, x, lp, enc_out, positions=positions,
+                           cache=lc, cache_pos=0)
+        return x, nc
+
+    h, cache = jax.lax.scan(body, h, (params["dec_layers"], cache))
+    h = rms_norm(h, params["ln_f"].astype(compute_dtype), cfg.norm_eps)
+    return L.lm_logits(params["embed"], h.astype(jnp.float32)), cache, enc_out

@@ -1,0 +1,171 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention+MLP block
+applied every ``shared_attn_every`` SSM blocks (weights reused each time,
+but each application keeps its own KV cache).
+
+Execution plan: n_layers = n_groups × shared_attn_every; scan over groups,
+each group = inner scan of `shared_attn_every` mamba blocks + one application
+of the shared transformer block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from . import ssm
+from .layers import rms_norm
+
+
+def _groups(cfg: ModelConfig):
+    g = cfg.shared_attn_every
+    assert g and cfg.n_layers % g == 0, "n_layers must divide shared_attn_every"
+    return cfg.n_layers // g, g
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    ke, kl, ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: ssm.init_mamba_block(k, cfg, dtype))(layer_keys)
+    k1, k2 = jax.random.split(ks)
+    shared = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_attention(k1, cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": L.init_mlp(k2, cfg, dtype, gated=True),
+    }
+    return {
+        "embed": L.init_embed(ke, cfg, dtype),
+        "mamba": stacked,
+        "shared_attn": shared,
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    leaf = lambda s: isinstance(s, tuple)
+    stack = jax.tree.map(lambda s: ("layers",) + tuple(s),
+                         ssm.mamba_block_specs(cfg), is_leaf=leaf)
+    return {
+        "embed": L.embed_specs(cfg),
+        "mamba": stack,
+        "shared_attn": {
+            "ln1": ("embed",),
+            "attn": L.attention_specs(cfg),
+            "ln2": ("embed",),
+            "mlp": L.mlp_specs(gated=True),
+        },
+        "ln_f": ("embed",),
+    }
+
+
+def _shared_block(cfg, x, sp, *, positions, cache=None, cache_pos=None):
+    h, nc = L.attention(rms_norm(x, sp["ln1"], cfg.norm_eps), sp["attn"], cfg,
+                        positions=positions, cache=cache, cache_pos=cache_pos)
+    x = x + h
+    x = x + L.mlp(rms_norm(x, sp["ln2"], cfg.norm_eps), sp["mlp"])
+    return x, nc
+
+
+def forward(params, cfg: ModelConfig, tokens, *, compute_dtype=jnp.bfloat16,
+            remat: str = "full", prefix_embeds=None):
+    n_groups, per = _groups(cfg)
+    h = L.embed_tokens(params["embed"], tokens).astype(compute_dtype)
+    positions = jnp.arange(h.shape[1])
+    shared = jax.tree.map(lambda a: a.astype(compute_dtype),
+                          params["shared_attn"])
+    grouped = jax.tree.map(
+        lambda a: a.reshape(n_groups, per, *a.shape[1:]), params["mamba"])
+
+    def group_body(x, glp):
+        def inner(xx, lp):
+            lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp)
+            return ssm.mamba_forward(lp, cfg, xx), None
+        x, _ = jax.lax.scan(inner, x, glp)
+        x, _ = _shared_block(cfg, x, shared, positions=positions)
+        return x, None
+
+    if remat in ("full", "dots"):
+        group_body = jax.checkpoint(group_body)
+    h, _ = jax.lax.scan(group_body, h, grouped)
+    h = rms_norm(h, params["ln_f"].astype(compute_dtype), cfg.norm_eps)
+    return L.lm_logits(params["embed"], h.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch, max_len, dtype=jnp.bfloat16):
+    n_groups, per = _groups(cfg)
+    m_one = ssm.init_mamba_cache(cfg, batch)
+    a_one = L.init_attention_cache(cfg, batch, max_len, dtype)
+
+    def rep(a, *lead):
+        return jnp.broadcast_to(a[(None,) * len(lead)], tuple(lead) + a.shape)
+
+    return {
+        "mamba": jax.tree.map(lambda a: rep(a, n_groups, per), m_one),
+        "attn": jax.tree.map(lambda a: rep(a, n_groups), a_one),
+    }
+
+
+def cache_specs(cfg: ModelConfig):
+    leaf = lambda s: isinstance(s, tuple)
+    return {
+        "mamba": jax.tree.map(lambda s: ("layers", None) + tuple(s),
+                              ssm.mamba_cache_specs(cfg), is_leaf=leaf),
+        "attn": jax.tree.map(lambda s: ("layers",) + tuple(s),
+                             L.attention_cache_specs(cfg), is_leaf=leaf),
+    }
+
+
+def _serve(params, cfg, h, cache, pos, compute_dtype, *, prefill_mode):
+    n_groups, per = _groups(cfg)
+    positions = pos + jnp.arange(h.shape[1])
+    shared = jax.tree.map(lambda a: a.astype(compute_dtype),
+                          params["shared_attn"])
+    grouped = jax.tree.map(
+        lambda a: a.reshape(n_groups, per, *a.shape[1:]), params["mamba"])
+
+    def group_body(x, scanned):
+        glp, m_cache, a_cache = scanned
+
+        def inner(xx, sc):
+            lp, lc = sc
+            lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp)
+            if prefill_mode:
+                xx, nc = ssm.mamba_forward(lp, cfg, xx, return_cache=True)
+            else:
+                xx, nc = ssm.mamba_decode_step(lp, cfg, xx, lc)
+            return xx, nc
+
+        x, m_nc = jax.lax.scan(inner, x, (glp, m_cache))
+        x, a_nc = _shared_block(cfg, x, shared, positions=positions,
+                                cache=a_cache, cache_pos=pos)
+        return x, (m_nc, a_nc)
+
+    h, (m_nc, a_nc) = jax.lax.scan(group_body, h,
+                                   (grouped, cache["mamba"], cache["attn"]))
+    return h, {"mamba": m_nc, "attn": a_nc}
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos,
+                *, compute_dtype=jnp.bfloat16):
+    h = L.embed_tokens(params["embed"], tokens).astype(compute_dtype)
+    h, cache = _serve(params, cfg, h, cache, pos, compute_dtype,
+                      prefill_mode=False)
+    h = rms_norm(h, params["ln_f"].astype(compute_dtype), cfg.norm_eps)
+    return L.lm_logits(params["embed"], h.astype(jnp.float32)), cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len,
+            *, compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16):
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len, cache_dtype)
+    h = L.embed_tokens(params["embed"], tokens).astype(compute_dtype)
+    h, cache = _serve(params, cfg, h, cache, jnp.int32(0), compute_dtype,
+                      prefill_mode=True)
+    h = rms_norm(h, params["ln_f"].astype(compute_dtype), cfg.norm_eps)
+    return L.lm_logits(params["embed"], h.astype(jnp.float32)), cache

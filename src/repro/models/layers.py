@@ -1,0 +1,437 @@
+"""Shared transformer building blocks (pure JAX, param pytrees = nested dicts).
+
+Conventions:
+  - einsum letters: b=batch s/t=seq h=heads k=kv-heads d=head_dim e=embed
+    f=ff v=vocab
+  - every init fn has a sibling ``*_specs`` returning the same pytree of
+    LOGICAL axis tuples (resolved to PartitionSpecs by distributed.sharding).
+  - attention supports: causal, sliding-window (SWA), prefix-LM (bidirectional
+    prefix), cross-attention, and KV-cache decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis_size, dtype=jnp.float32):
+    scale = 1.0 / jnp.sqrt(jnp.asarray(in_axis_size, jnp.float32))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, gamma, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_table(positions, head_dim, theta):
+    """positions (…,) int -> (…, head_dim/2) cos/sin tables (f32)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (b, s, h, d) with cos/sin (s, d/2) or (b, s, d/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:                       # (s, half) -> broadcast b, h
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:                                   # (b, s, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), d, dtype),
+        "wk": dense_init(ks[1], (d, kv * hd), d, dtype),
+        "wv": dense_init(ks[2], (d, kv * hd), d, dtype),
+        "wo": dense_init(ks[3], (h * hd, d), h * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def attention_specs(cfg: ModelConfig):
+    s = {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"),
+        "wo": ("heads", "embed"),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ("heads",)
+        s["bk"] = ("kv_heads",)
+        s["bv"] = ("kv_heads",)
+    return s
+
+
+def _build_mask(q_len, kv_len, *, causal, window, prefix_len, q_offset):
+    """Additive mask (q_len, kv_len) in f32 (0 or -inf)."""
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(kv_len)[None, :]
+    ok = jnp.ones((q_len, kv_len), bool)
+    if causal:
+        ok = kj <= qi
+        if window:
+            ok &= kj > qi - window
+        if prefix_len:
+            ok |= kj < prefix_len          # bidirectional over the prefix
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def attention(
+    x,
+    p,
+    cfg: ModelConfig,
+    *,
+    positions=None,            # (s,) int32 positions of x in the sequence
+    causal=True,
+    prefix_len=0,
+    x_kv=None,                 # cross-attention source (b, s_kv, e)
+    cache=None,                # dict(k, v) (b, kv, S_max, d) for decode
+    cache_pos=None,            # scalar int32 — write offset in the cache
+    rope=True,
+):
+    """Returns (out (b,s,e), new_cache)."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    src = x if x_kv is None else x_kv
+    s_kv = src.shape[1]
+
+    q = x @ p["wq"]
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s_kv, kv, hd)
+    v = v.reshape(b, s_kv, kv, hd)
+
+    if positions is None:
+        positions = jnp.arange(s)
+    if rope and x_kv is None:
+        cos_q, sin_q = rope_table(positions, hd, cfg.rope_theta)
+        # keep q/k in the compute dtype: RoPE's f32 tables would otherwise
+        # promote the attention einsums (and the whole KV cache!) to f32
+        q = apply_rope(q, cos_q, sin_q).astype(v.dtype)
+        k = apply_rope(k, cos_q, sin_q).astype(v.dtype)
+
+    q = constrain(q, "batch", "seq", "heads_act", None)
+    k = constrain(k, "batch", "seq", "kv_heads_act", None)
+    v = constrain(v, "batch", "seq", "kv_heads_act", None)
+
+    from ..distributed.sharding import naive_mode
+
+    q_offset = 0
+    if (cache is not None and s == 1 and x_kv is None and not naive_mode()):
+        flash = _maybe_flash_decode(q, k, v, cache, cache_pos, cfg, b, h, kv,
+                                    hd)
+        if flash is not None:
+            out, cache = flash
+            out = out.reshape(b, s, h * hd) @ p["wo"]
+            return constrain(out, "batch", "seq", "embed"), cache
+    if cache is not None:
+        # decode / incremental: append k,v at cache_pos, attend over cache
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, cache_pos, 0, 0))
+        cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        s_kv = k.shape[1]
+        q_offset = cache_pos
+
+    rep = h // kv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    if naive_mode() and rep > 1:
+        # paper-naive GQA: materialize repeated K/V (baseline for §Perf H1)
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        kv, rep = h, 1
+
+    # long-sequence full forward: blockwise over query chunks so the (s, s)
+    # score matrix is never materialized (flash-attention-style tiling; the
+    # TPU-memory-realistic path for the 32k prefill cells)
+    if (cache is None and x_kv is None and s == s_kv and s > _BLOCKWISE_MIN
+            and s % _BLOCK_Q == 0):
+        out = _blockwise_causal_attention(
+            q, k, v, cfg, scale, prefix_len=prefix_len)
+        out = constrain(out, "batch", "seq", "heads_act", None)
+        out = out.reshape(b, s, h * hd) @ p["wo"]
+        return constrain(out, "batch", "seq", "embed"), cache
+
+    # grouped-query attention WITHOUT materializing repeated K/V (opt H1):
+    # q (b,s,h,hd) -> (b,s,kv,rep,hd); contract each kv group directly.
+    qg = q.reshape(b, s, kv, rep, hd)
+    logits = jnp.einsum("bskrd,btkd->bkrst", qg, k).astype(jnp.float32) * scale
+    logits = logits.reshape(b, h, s, s_kv)
+
+    if cache is not None:
+        # mask: key position must be <= q_offset + row and already written
+        qi = q_offset + jnp.arange(s)[:, None]
+        kj = jnp.arange(s_kv)[None, :]
+        ok = kj <= qi
+        if cfg.sliding_window:
+            ok &= kj > qi - cfg.sliding_window
+        if prefix_len:
+            ok |= (kj < prefix_len) & (qi < prefix_len)  # bidirectional prefix
+        mask = jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+    elif x_kv is not None:
+        mask = jnp.zeros((s, s_kv), jnp.float32)          # full cross-attn
+    else:
+        mask = _build_mask(s, s_kv, causal=causal,
+                           window=cfg.sliding_window, prefix_len=prefix_len,
+                           q_offset=0)
+    logits = logits + mask[None, None]
+
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    probs = probs.reshape(b, kv, rep, s, s_kv)
+    out = jnp.einsum("bkrst,btkd->bskrd", probs, v)
+    out = out.reshape(b, s, h, hd)
+    out = constrain(out, "batch", "seq", "heads_act", None)
+    out = out.reshape(b, s, h * hd) @ p["wo"]
+    return constrain(out, "batch", "seq", "embed"), cache
+
+
+_BLOCKWISE_MIN = 8192   # use blockwise attention above this sequence length
+_BLOCK_Q = 1024
+
+
+def _blockwise_causal_attention(q, k, v, cfg, scale, *, prefix_len=0):
+    """Query-chunked causal attention: peak memory O(block_q * s) per head.
+
+    Scans over query blocks; each block computes its (block_q, s) scores,
+    masks (causal/SWA/prefix), softmaxes and contracts with V. K/V stay in
+    grouped (kv-head) layout — never repeated (opt H1).
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    nq = s // _BLOCK_Q
+    qb = q.reshape(b, nq, _BLOCK_Q, kv, rep, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    kj = jnp.arange(s)[None, :]
+
+    def block(carry, args):
+        qi_block, q_off = args                        # (b, Q, kv, rep, hd)
+        logits = jnp.einsum("bskrd,btkd->bkrst", qi_block, k)
+        logits = logits.astype(jnp.float32) * scale
+        qi = q_off + jnp.arange(_BLOCK_Q)[:, None]
+        ok = kj <= qi
+        if cfg.sliding_window:
+            ok &= kj > qi - cfg.sliding_window
+        if prefix_len:
+            ok |= (kj < prefix_len) & (qi < prefix_len)
+        logits = logits + jnp.where(ok, 0.0, -jnp.inf)[None, None, None]
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkrst,btkd->bskrd", probs, v)
+        return carry, out
+
+    offs = jnp.arange(nq) * _BLOCK_Q
+    _, outs = jax.lax.scan(block, None, (qb, offs))
+    # (nq, b, Q, kv, rep, hd) -> (b, s, h, hd)
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hd)
+
+
+def _maybe_flash_decode(q, k_new, v_new, cache, pos, cfg, b, h, kv, hd):
+    """Flash-decoding for a SEQ-SHARDED KV cache (opt H3, shard_map).
+
+    When the sharding rules map "cache_seq" to mesh axes (MQA/GQA archs whose
+    kv-head count cannot shard over "model"), the naive GSPMD lowering of the
+    cache update rewrites the full cache through selects every step. This
+    manual kernel instead:
+      1. writes the new K/V into the single owning shard (one-slot DUS;
+         non-owners rewrite their existing slot),
+      2. computes a LOCAL partial softmax (m, l, o) over its cache shard,
+      3. combines across shards with tiny psums (flash-attention algebra).
+    Per-step HBM traffic: read each cache shard once. Collectives: O(b·h) + o.
+    Returns None when the layout doesn't apply (falls back to dense path).
+    """
+    from ..distributed.sharding import (
+        current_mesh, current_rules, logical_to_spec)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = current_mesh()
+    rules = current_rules()
+    if mesh is None or rules is None or not rules.get("cache_seq"):
+        return None
+
+    cache_spec = logical_to_spec(("batch", "cache_seq", None, None))
+    seq_axes = cache_spec[1]
+    if seq_axes is None:
+        return None
+    seq_axes = (seq_axes,) if isinstance(seq_axes, str) else tuple(seq_axes)
+    q_spec = logical_to_spec(("batch", None, None, None))
+
+    rep = h // kv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    window = cfg.sliding_window
+
+    def fn(q_l, kn_l, vn_l, ck_l, cv_l, pos):
+        b_l, s_loc = ck_l.shape[0], ck_l.shape[1]
+        idx = jax.lax.axis_index(seq_axes)
+        start = (idx * s_loc).astype(jnp.int32)
+        local_pos = jnp.clip(pos - start, 0, s_loc - 1)
+        is_owner = (pos >= start) & (pos < start + s_loc)
+
+        def write(buf, new):
+            old = jax.lax.dynamic_slice(
+                buf, (0, local_pos, 0, 0), (b_l, 1, kv, hd))
+            val = jnp.where(is_owner, new.astype(buf.dtype), old)
+            return jax.lax.dynamic_update_slice(buf, val,
+                                                (0, local_pos, 0, 0))
+
+        ck_l = write(ck_l, kn_l)
+        cv_l = write(cv_l, vn_l)
+
+        qg = q_l.reshape(b_l, 1, kv, rep, hd).astype(ck_l.dtype)
+        logits = jnp.einsum("bskrd,btkd->bkrst", qg, ck_l,
+                            preferred_element_type=jnp.float32)
+        logits = logits * scale                          # (b, kv, rep, 1, t)
+        ids = start + jnp.arange(s_loc)
+        ok = ids <= pos
+        if window:
+            ok &= ids > pos - window
+        logits = jnp.where(ok[None, None, None, None, :], logits, -jnp.inf)
+
+        m_loc = jnp.max(logits, axis=-1)                 # (b, kv, rep, 1)
+        m = jax.lax.pmax(m_loc, seq_axes)
+        p = jnp.exp(logits - m[..., None])
+        p = jnp.where(jnp.isfinite(logits), p, 0.0)
+        l = jax.lax.psum(jnp.sum(p, axis=-1), seq_axes)  # (b, kv, rep, 1)
+        o_loc = jnp.einsum("bkrst,btkd->bskrd", p.astype(cv_l.dtype), cv_l)
+        o = jax.lax.psum(o_loc.astype(jnp.float32), seq_axes)
+        o = o / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return o.reshape(b_l, 1, h, hd).astype(cv_l.dtype), ck_l, cv_l
+
+    out, ck, cv = shard_map(
+        fn, mesh=mesh,
+        in_specs=(q_spec, q_spec, q_spec, cache_spec, cache_spec, P()),
+        out_specs=(q_spec, cache_spec, cache_spec),
+        check_rep=False,
+    )(q, k_new, v_new, cache["k"], cache["v"], pos)
+    return out, {"k": ck, "v": cv}
+
+
+def init_attention_cache(cfg: ModelConfig, batch, max_len, dtype=jnp.bfloat16):
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+    }
+
+
+def attention_cache_specs(cfg: ModelConfig):
+    return {
+        "k": ("batch", "cache_seq", "kv_heads_act", None),
+        "v": ("batch", "cache_seq", "kv_heads_act", None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, dtype=jnp.float32, d_ff=None, gated=True):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if gated:
+        return {
+            "wg": dense_init(ks[0], (d, f), d, dtype),
+            "wu": dense_init(ks[1], (d, f), d, dtype),
+            "wd": dense_init(ks[2], (f, d), f, dtype),
+        }
+    return {
+        "wu": dense_init(ks[0], (d, f), d, dtype),
+        "wd": dense_init(ks[1], (f, d), f, dtype),
+    }
+
+
+def mlp_specs(gated=True):
+    if gated:
+        return {"wg": ("embed", "mlp"), "wu": ("embed", "mlp"),
+                "wd": ("mlp", "embed")}
+    return {"wu": ("embed", "mlp"), "wd": ("mlp", "embed")}
+
+
+def mlp(x, p):
+    if "wg" in p:
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    else:
+        h = jax.nn.gelu(x @ p["wu"])
+    h = constrain(h, "batch", "seq", "mlp")
+    return constrain(h @ p["wd"], "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# embeddings / lm head
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, cfg: ModelConfig, dtype=jnp.float32):
+    p = {"tok": embed_init(key, (cfg.vocab_padded, cfg.d_model), dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(
+            jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab_padded),
+            cfg.d_model, dtype)
+    return p
+
+
+def embed_specs(cfg: ModelConfig):
+    s = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        s["head"] = ("embed", "vocab")
+    return s
+
+
+def embed_tokens(p, tokens):
+    return constrain(p["tok"][tokens], "batch", "seq", "embed")
+
+
+def lm_logits(p, x):
+    w = p["head"] if "head" in p else p["tok"].T
+    return constrain(x @ w, "batch", "seq", "vocab")

@@ -1,0 +1,152 @@
+"""Uniform model API over all families + input-spec builders for the dry-run.
+
+ModelAPI:
+  init_params(key, cfg, dtype)        -> param pytree
+  param_specs(cfg)                    -> pytree of logical-axis tuples
+  forward(params, cfg, batch, **kw)   -> logits (b, s, v)
+  init_cache(cfg, batch, max_len)     -> decode cache
+  cache_specs(cfg)                    -> cache logical axes
+  decode_step(params, cfg, tokens, cache, pos, extras, **kw) -> (logits, cache)
+  prefill(params, cfg, batch, max_len, **kw) -> (logits, cache[, extras])
+
+Batch layouts (all int32 tokens/labels):
+  dense/ssm/hybrid/moe : {tokens, labels}
+  encdec               : {src_embeds (b,s,d) bf16, tokens, labels}
+  vlm                  : {image_embeds (b,p,d) bf16, tokens, labels}
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeCell
+from . import encdec, hybrid, moe, ssm, transformer, vlm
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    family: str
+    init_params: Callable
+    param_specs: Callable
+    forward: Callable                  # (params, cfg, batch, **kw) -> logits
+    init_cache: Optional[Callable]
+    cache_specs: Optional[Callable]
+    decode_step: Optional[Callable]    # (params,cfg,tokens,cache,pos,extras)
+    prefill: Optional[Callable]
+
+
+def _dense_forward(mod):
+    def fwd(params, cfg, batch, **kw):
+        return mod.forward(params, cfg, batch["tokens"], **kw)
+    return fwd
+
+
+def _dense_decode(mod):
+    def step(params, cfg, tokens, cache, pos, extras=None, **kw):
+        return mod.decode_step(params, cfg, tokens, cache, pos, **kw)
+    return step
+
+
+def _dense_prefill(mod):
+    def pre(params, cfg, batch, max_len, **kw):
+        return mod.prefill(params, cfg, batch["tokens"], max_len, **kw)
+    return pre
+
+
+def _encdec_decode(params, cfg, tokens, cache, pos, extras=None, **kw):
+    return encdec.decode_step(params, cfg, tokens, cache, pos,
+                              extras["enc_out"], **kw)
+
+
+def _vlm_prefill(params, cfg, batch, max_len, **kw):
+    return vlm.prefill(params, cfg, batch, max_len, **kw)
+
+
+_FAMILIES: dict[str, ModelAPI] = {
+    "dense": ModelAPI(
+        "dense", transformer.init_params, transformer.param_specs,
+        _dense_forward(transformer), transformer.init_cache,
+        transformer.cache_specs, _dense_decode(transformer),
+        _dense_prefill(transformer)),
+    "ssm": ModelAPI(
+        "ssm", ssm.init_params, ssm.param_specs,
+        _dense_forward(ssm), ssm.init_cache, ssm.cache_specs,
+        _dense_decode(ssm), _dense_prefill(ssm)),
+    "hybrid": ModelAPI(
+        "hybrid", hybrid.init_params, hybrid.param_specs,
+        _dense_forward(hybrid), hybrid.init_cache, hybrid.cache_specs,
+        _dense_decode(hybrid), _dense_prefill(hybrid)),
+    "moe": ModelAPI(
+        "moe", moe.init_params, moe.param_specs,
+        _dense_forward(moe), moe.init_cache, moe.cache_specs,
+        _dense_decode(moe), _dense_prefill(moe)),
+    "encdec": ModelAPI(
+        "encdec", encdec.init_params, encdec.param_specs,
+        lambda p, c, b, **kw: encdec.forward(p, c, b, **kw),
+        encdec.init_cache, encdec.cache_specs, _encdec_decode,
+        lambda p, c, b, m, **kw: encdec.prefill(p, c, b, m, **kw)),
+    "vlm": ModelAPI(
+        "vlm", vlm.init_params, vlm.param_specs,
+        lambda p, c, b, **kw: vlm.forward(p, c, b, **kw),
+        vlm.init_cache, vlm.cache_specs, _dense_decode(vlm), _vlm_prefill),
+}
+
+
+def get_api(cfg: ModelConfig) -> ModelAPI:
+    return _FAMILIES[cfg.family]
+
+
+# ---------------------------------------------------------------------------
+# abstract input specs (ShapeDtypeStructs — no allocation) per shape cell
+# ---------------------------------------------------------------------------
+
+
+def train_batch_specs(cfg: ModelConfig, batch: int, seq: int):
+    sd = jax.ShapeDtypeStruct
+    b = {
+        "tokens": sd((batch, seq), jnp.int32),
+        "labels": sd((batch, seq), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        b["src_embeds"] = sd((batch, seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        b["image_embeds"] = sd((batch, cfg.n_prefix_tokens, cfg.d_model),
+                               jnp.bfloat16)
+    return b
+
+
+def decode_inputs_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    """Inputs for one decode step at a cache of length cache_len."""
+    sd = jax.ShapeDtypeStruct
+    api = get_api(cfg)
+    cache = jax.eval_shape(
+        lambda: api.init_cache(cfg, batch, cache_len, jnp.bfloat16))
+    out = {
+        "tokens": sd((batch, 1), jnp.int32),
+        "cache": cache,
+        "pos": sd((), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        out["extras"] = {"enc_out": sd((batch, cache_len, cfg.d_model),
+                                       jnp.bfloat16)}
+    return out
+
+
+def make_train_batch(cfg: ModelConfig, batch: int, seq: int, key):
+    """Concrete random batch (smoke tests / examples)."""
+    kt, ke = jax.random.split(jax.random.key(key) if isinstance(key, int) else key)
+    b = {
+        "tokens": jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size,
+                                     jnp.int32),
+    }
+    b["labels"] = jnp.roll(b["tokens"], -1, axis=1)
+    if cfg.family == "encdec":
+        b["src_embeds"] = jax.random.normal(
+            ke, (batch, seq, cfg.d_model), jnp.float32) * 0.02
+    if cfg.family == "vlm":
+        b["image_embeds"] = jax.random.normal(
+            ke, (batch, cfg.n_prefix_tokens, cfg.d_model), jnp.float32) * 0.02
+    return b

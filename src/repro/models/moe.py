@@ -1,0 +1,667 @@
+"""Mixture-of-Experts layers + Multi-head Latent Attention (MLA).
+
+MoE dispatch is the TPU-standard *fixed-capacity sort* formulation: token
+copies are sorted by expert id, packed into a static (E, C, d) buffer
+(over-capacity copies dropped), run through batched expert GEMMs
+(MXU-friendly einsum 'ecd,edf->ecf'), and scatter-added back weighted by the
+router probabilities. All shapes static — compiles identically on 1 or 512
+devices; experts shard over the "experts" logical axis (EP on the model axis).
+
+MLA (DeepSeek-V2): KV compressed to a small latent (kv_lora_rank) plus one
+shared RoPE key. Train/prefill use the naive expanded form; decode uses the
+*absorbed* form attending directly over the compressed cache — the cache is
+(b, s, kv_lora + rope_dim) regardless of head count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MLAConfig, ModelConfig, MoEConfig
+from ..distributed.sharding import constrain
+from .layers import dense_init, rms_norm
+
+# ---------------------------------------------------------------------------
+# routed experts
+# ---------------------------------------------------------------------------
+
+
+def init_moe_ffn(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), d, jnp.float32),  # router in f32
+        "wg": dense_init(ks[1], (e, d, f), d, dtype),
+        "wu": dense_init(ks[2], (e, d, f), d, dtype),
+        "wd": dense_init(ks[3], (e, f, d), f, dtype),
+    }
+    if m.n_shared_experts:
+        fs = m.d_ff_expert * m.n_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wg": dense_init(kk[0], (d, fs), d, dtype),
+            "wu": dense_init(kk[1], (d, fs), d, dtype),
+            "wd": dense_init(kk[2], (fs, d), fs, dtype),
+        }
+    return p
+
+
+def moe_ffn_specs(cfg: ModelConfig):
+    s = {
+        "router": ("embed", None),
+        "wg": ("experts", "embed", "expert_mlp"),
+        "wu": ("experts", "embed", "expert_mlp"),
+        "wd": ("experts", "expert_mlp", "embed"),
+    }
+    if cfg.moe.n_shared_experts:
+        s["shared"] = {"wg": ("embed", "mlp"), "wu": ("embed", "mlp"),
+                       "wd": ("mlp", "embed")}
+    return s
+
+
+def moe_capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    cap = int(math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor
+                        / max(cfg.n_experts, 1)))
+    return max(cap, 4)
+
+
+def moe_ffn(x, p, cfg: ModelConfig):
+    """x (b, s, d) -> (y (b, s, d), aux_loss scalar).
+
+    Under active sharding rules that map "experts" to a mesh axis, dispatch
+    runs inside shard_map (explicit expert parallelism, opt H4): each model
+    rank packs only the tokens routed to ITS local experts and the combine
+    is ONE psum of (tokens, d) over the expert axis — versus the GSPMD-routed
+    global sort/scatter whose collectives dominated the baseline roofline.
+    """
+    ep = _moe_ffn_ep(x, p, cfg)
+    if ep is not None:
+        return ep
+    return _moe_ffn_local(x, p, cfg)
+
+
+def _moe_ffn_local(x, p, cfg: ModelConfig):
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.n_experts, m.top_k
+    xf = x.reshape(t, d)
+
+    gates = (xf.astype(jnp.float32) @ p["router"])          # (t, e)
+    probs = jax.nn.softmax(gates, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, k)                # (t, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                            # (e,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_ids, e, dtype=jnp.float32), axis=1), axis=0)
+    aux = jnp.sum(me * ce) * e * m.aux_loss_weight
+
+    # ---- fixed-capacity packing (sorted by expert id)
+    cap = moe_capacity(t, m)
+    flat_e = top_ids.reshape(-1)                            # (t*k,)
+    flat_src = jnp.repeat(jnp.arange(t), k)                 # (t*k,)
+    flat_w = top_w.reshape(-1)
+
+    order = jnp.argsort(flat_e)                             # stable
+    e_sorted = flat_e[order]
+    src_sorted = flat_src[order]
+    w_sorted = flat_w[order]
+
+    counts = jnp.bincount(flat_e, length=e)                 # (e,)
+    starts = jnp.cumsum(counts) - counts                    # exclusive
+    pos_in_e = jnp.arange(t * k) - starts[e_sorted]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, e_sorted * cap + pos_in_e, e * cap)  # overflow row
+
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    buf = buf.at[slot].set(xf[src_sorted], mode="drop",
+                           unique_indices=True)
+    he = buf[: e * cap].reshape(e, cap, d)
+
+    hg = jax.nn.silu(jnp.einsum("ecd,edf->ecf", he, p["wg"]))
+    hu = jnp.einsum("ecd,edf->ecf", he, p["wu"])
+    ye = jnp.einsum("ecf,efd->ecd", hg * hu, p["wd"])       # (e, cap, d)
+    ye = constrain(ye, "experts", None, "embed")
+
+    yflat = ye.reshape(e * cap, d)
+    contrib = jnp.where(keep[:, None],
+                        yflat[jnp.minimum(slot, e * cap - 1)]
+                        * w_sorted[:, None].astype(x.dtype),
+                        0.0)
+    y = jnp.zeros((t, d), x.dtype).at[src_sorted].add(contrib)
+
+    if m.n_shared_experts:
+        sp = p["shared"]
+        y = y + (jax.nn.silu(xf @ sp["wg"]) * (xf @ sp["wu"])) @ sp["wd"]
+    return y.reshape(b, s, d), aux
+
+
+def _moe_ffn_ep(x, p, cfg: ModelConfig):
+    """Expert-parallel MoE via shard_map (see moe_ffn docstring). Returns
+    None when no mesh/rules are active (smoke tests use the local path)."""
+    from ..distributed.sharding import (
+        current_mesh, current_rules, logical_to_spec)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from ..distributed.sharding import naive_mode
+    mesh = current_mesh()
+    rules = current_rules()
+    if (mesh is None or rules is None or not rules.get("experts")
+            or naive_mode()):
+        return None
+    m = cfg.moe
+    ep_axes = rules["experts"]
+    ep_axes = (ep_axes,) if isinstance(ep_axes, str) else tuple(ep_axes)
+    ep_size = 1
+    for a in ep_axes:
+        ep_size *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    if m.n_experts % ep_size != 0:
+        return None
+
+    b, s, d = x.shape
+    e, k = m.n_experts, m.top_k
+    e_loc = e // ep_size
+
+    x_spec = logical_to_spec(("batch", None, None))
+    w_spec = P(ep_axes[0] if len(ep_axes) == 1 else ep_axes, None, None)
+    r_spec = P()
+    batch_axes = x_spec[0]
+    batch_axes = (() if batch_axes is None else
+                  ((batch_axes,) if isinstance(batch_axes, str)
+                   else tuple(batch_axes)))
+
+    def fn(x_l, router, wg, wu, wd):
+        b_l = x_l.shape[0]
+        t_l = b_l * s
+        xf = x_l.reshape(t_l, d)
+        my_rank = jax.lax.axis_index(ep_axes)
+
+        gates = xf.astype(jnp.float32) @ router          # (t_l, e) — full E
+        probs = jax.nn.softmax(gates, axis=-1)
+        top_w, top_ids = jax.lax.top_k(probs, k)
+        top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jnp.sum(
+            jax.nn.one_hot(top_ids, e, dtype=jnp.float32), axis=1), axis=0)
+        aux = jnp.sum(me * ce) * e * m.aux_loss_weight
+        if batch_axes:
+            aux = jax.lax.pmean(aux, batch_axes)   # global-batch average
+
+        # keep only copies owned by this rank's expert slice
+        flat_e = top_ids.reshape(-1)
+        flat_src = jnp.repeat(jnp.arange(t_l), k)
+        flat_w = top_w.reshape(-1)
+        owner = flat_e // e_loc
+        local_e = flat_e - my_rank * e_loc               # local expert id
+        mine = owner == my_rank
+
+        cap = moe_capacity(t_l, m) * 2   # headroom for routing imbalance
+        order = jnp.argsort(jnp.where(mine, local_e, e_loc))
+        e_sorted = jnp.where(mine, local_e, e_loc)[order]
+        src_sorted = flat_src[order]
+        w_sorted = flat_w[order]
+        counts = jnp.bincount(jnp.where(mine, local_e, e_loc), length=e_loc + 1)
+        starts = jnp.cumsum(counts) - counts
+        pos_in_e = jnp.arange(t_l * k) - starts[e_sorted]
+        keep = (e_sorted < e_loc) & (pos_in_e < cap)
+        slot = jnp.where(keep, e_sorted * cap + pos_in_e, e_loc * cap)
+
+        buf = jnp.zeros((e_loc * cap + 1, d), x_l.dtype)
+        buf = buf.at[slot].set(xf[src_sorted], mode="drop",
+                               unique_indices=True)
+        he = buf[: e_loc * cap].reshape(e_loc, cap, d)
+        hg = jax.nn.silu(jnp.einsum("ecd,edf->ecf", he, wg))
+        hu = jnp.einsum("ecd,edf->ecf", he, wu)
+        ye = jnp.einsum("ecf,efd->ecd", hg * hu, wd)
+        yflat = ye.reshape(e_loc * cap, d)
+        contrib = jnp.where(keep[:, None],
+                            yflat[jnp.minimum(slot, e_loc * cap - 1)]
+                            * w_sorted[:, None].astype(x_l.dtype), 0.0)
+        y = jnp.zeros((t_l, d), x_l.dtype).at[src_sorted].add(contrib)
+        y = jax.lax.psum(y, ep_axes)                     # combine expert ranks
+        return y.reshape(b_l, s, d), aux
+
+    y, aux = shard_map(
+        fn, mesh=mesh,
+        in_specs=(x_spec, r_spec, w_spec, w_spec, w_spec),
+        out_specs=(x_spec, P()),
+        check_rep=False,
+    )(x, p["router"], p["wg"], p["wu"], p["wd"])
+
+    if m.n_shared_experts:
+        # shared expert stays OUTSIDE the shard_map: standard TP sharding
+        # ("embed" x "mlp") with GSPMD-inserted collectives
+        sp = p["shared"]
+        from ..distributed.sharding import constrain as _c
+        hs = jax.nn.silu(x @ sp["wg"]) * (x @ sp["wu"])
+        hs = _c(hs, "batch", "seq", "mlp")
+        y = y + _c(hs @ sp["wd"], "batch", "seq", "embed")
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig, dtype=jnp.float32):
+    a = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv, r = a.nope_head_dim, a.rope_head_dim, a.v_head_dim, a.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, h * (dn + dr)), d, dtype),
+        "w_dkv": dense_init(ks[1], (d, r), d, dtype),
+        "w_kr": dense_init(ks[2], (d, dr), d, dtype),
+        "kv_norm": jnp.ones((r,), dtype),
+        "w_uk": dense_init(ks[3], (r, h * dn), r, dtype),
+        "w_uv": dense_init(ks[4], (r, h * dv), r, dtype),
+        "wo": dense_init(ks[5], (h * dv, d), h * dv, dtype),
+    }
+
+
+def mla_specs(cfg: ModelConfig):
+    return {
+        "wq": ("embed", "heads"),
+        "w_dkv": ("embed", None),
+        "w_kr": ("embed", None),
+        "kv_norm": (None,),
+        "w_uk": (None, "heads"),
+        "w_uv": (None, "heads"),
+        "wo": ("heads", "embed"),
+    }
+
+
+def _mla_rope(x, positions, theta):
+    from .layers import apply_rope, rope_table
+    cos, sin = rope_table(positions, x.shape[-1], theta)
+    return apply_rope(x, cos, sin)
+
+
+def mla_attention(x, p, cfg: ModelConfig, *, positions=None, cache=None,
+                  cache_pos=None):
+    """Naive (expanded) MLA for train/prefill; absorbed form for decode.
+
+    cache: {"ckv": (b, S, r), "kr": (b, S, dr)} — compressed, head-free.
+    """
+    a = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv, r = a.nope_head_dim, a.rope_head_dim, a.v_head_dim, a.kv_lora_rank
+    if positions is None:
+        positions = jnp.arange(s)
+
+    q = (x @ p["wq"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    # cast back to compute dtype: RoPE's f32 tables must not promote the
+    # score einsums (and the compressed cache) to f32
+    q_rope = _mla_rope(q_rope, positions, cfg.rope_theta).astype(x.dtype)
+
+    ckv = rms_norm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)   # (b,s,r)
+    kr = _mla_rope((x @ p["w_kr"])[:, :, None, :], positions,
+                   cfg.rope_theta)[:, :, 0].astype(x.dtype)       # (b,s,dr)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dn + dr, jnp.float32))
+
+    if cache is not None:
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_pos, 0))
+        kr_c = jax.lax.dynamic_update_slice(
+            cache["kr"], kr.astype(cache["kr"].dtype), (0, cache_pos, 0))
+        cache = {"ckv": ckv_c, "kr": kr_c}
+        s_kv = ckv_c.shape[1]
+        # absorbed: q_eff = q_nope @ W_uk  (per head, into latent space)
+        w_uk = p["w_uk"].reshape(r, h, dn)
+        q_eff = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)        # (b,s,h,r)
+        logits = (jnp.einsum("bshr,btr->bhst", q_eff, ckv_c)
+                  + jnp.einsum("bshd,btd->bhst", q_rope, kr_c))
+        logits = logits.astype(jnp.float32) * scale
+        qi = cache_pos + jnp.arange(s)[:, None]
+        kj = jnp.arange(s_kv)[None, :]
+        mask = jnp.where(kj <= qi, 0.0, -jnp.inf).astype(jnp.float32)
+        probs = jax.nn.softmax(logits + mask[None, None], -1).astype(x.dtype)
+        lat = jnp.einsum("bhst,btr->bshr", probs, ckv_c)          # (b,s,h,r)
+        w_uv = p["w_uv"].reshape(r, h, dv)
+        out = jnp.einsum("bshr,rhd->bshd", lat, w_uv)             # (b,s,h,dv)
+    else:
+        k_nope = (ckv @ p["w_uk"]).reshape(b, s, h, dn)
+        v = (ckv @ p["w_uv"]).reshape(b, s, h, dv)
+        logits = (jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+                  + jnp.einsum("bshd,btd->bhst", q_rope, kr))
+        logits = logits.astype(jnp.float32) * scale
+        qi = jnp.arange(s)[:, None]
+        kj = jnp.arange(s)[None, :]
+        mask = jnp.where(kj <= qi, 0.0, -jnp.inf).astype(jnp.float32)
+        probs = jax.nn.softmax(logits + mask[None, None], -1).astype(x.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", probs, v)
+
+    out = constrain(out, "batch", "seq", "heads", None)
+    y = out.reshape(b, s, h * dv) @ p["wo"]
+    return constrain(y, "batch", "seq", "embed"), cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch, max_len, dtype=jnp.bfloat16):
+    a = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, a.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, max_len, a.rope_head_dim), dtype),
+    }
+
+
+def mla_cache_specs(cfg: ModelConfig):
+    return {"ckv": ("batch", "cache_seq", None), "kr": ("batch", "cache_seq", None)}
+
+
+# ---------------------------------------------------------------------------
+# full MoE decoder LM (deepseek-v2-lite / llama4-maverick)
+# ---------------------------------------------------------------------------
+
+
+def _is_moe_layer(cfg: ModelConfig, idx: int) -> bool:
+    m = cfg.moe
+    if idx < m.first_dense:
+        return False
+    return (idx - m.first_dense) % m.moe_every == 0
+
+
+def _uses_mla(cfg: ModelConfig) -> bool:
+    return cfg.mla is not None
+
+
+def init_layer(key, cfg: ModelConfig, moe_layer: bool, dtype=jnp.float32):
+    from . import layers as L
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": jnp.ones((cfg.d_model,), dtype),
+         "ln2": jnp.ones((cfg.d_model,), dtype)}
+    if _uses_mla(cfg):
+        p["attn"] = init_mla(k1, cfg, dtype)
+    else:
+        p["attn"] = L.init_attention(k1, cfg, dtype)
+    if moe_layer:
+        p["moe"] = init_moe_ffn(k2, cfg, dtype)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg, dtype, gated=True)
+    return p
+
+
+def layer_specs(cfg: ModelConfig, moe_layer: bool):
+    from . import layers as L
+    s = {"ln1": ("embed",), "ln2": ("embed",)}
+    s["attn"] = mla_specs(cfg) if _uses_mla(cfg) else L.attention_specs(cfg)
+    if moe_layer:
+        s["moe"] = moe_ffn_specs(cfg)
+    else:
+        s["mlp"] = L.mlp_specs(gated=True)
+    return s
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    """MoE models stack layers in (possibly) two scan groups: dense & moe.
+
+    The layer schedule (which index is MoE) is static; we store two stacked
+    pytrees plus the schedule so forward can scan each group.
+    """
+    from .layers import init_embed
+    ke, kl = jax.random.split(key)
+    keys = jax.random.split(kl, cfg.n_layers)
+    moe_idx = [i for i in range(cfg.n_layers) if _is_moe_layer(cfg, i)]
+    dense_idx = [i for i in range(cfg.n_layers) if i not in set(moe_idx)]
+    params = {"embed": init_embed(ke, cfg, dtype),
+              "ln_f": jnp.ones((cfg.d_model,), dtype)}
+    if dense_idx:
+        params["dense_layers"] = jax.vmap(
+            lambda k: init_layer(k, cfg, False, dtype)
+        )(jnp.stack([keys[i] for i in dense_idx]))
+    if moe_idx:
+        params["moe_layers"] = jax.vmap(
+            lambda k: init_layer(k, cfg, True, dtype)
+        )(jnp.stack([keys[i] for i in moe_idx]))
+    return params
+
+
+def layer_schedule(cfg: ModelConfig):
+    """Returns list of ("dense"|"moe", group_position) in layer order."""
+    sched = []
+    nd = nm = 0
+    for i in range(cfg.n_layers):
+        if _is_moe_layer(cfg, i):
+            sched.append(("moe", nm)); nm += 1
+        else:
+            sched.append(("dense", nd)); nd += 1
+    return sched
+
+
+def param_specs(cfg: ModelConfig):
+    from .layers import embed_specs
+    def stack(tree):
+        return jax.tree.map(lambda s: ("layers",) + tuple(s), tree,
+                            is_leaf=lambda s: isinstance(s, tuple))
+    specs = {"embed": embed_specs(cfg), "ln_f": ("embed",)}
+    sched = layer_schedule(cfg)
+    if any(kind == "dense" for kind, _ in sched):
+        specs["dense_layers"] = stack(layer_specs(cfg, False))
+    if any(kind == "moe" for kind, _ in sched):
+        specs["moe_layers"] = stack(layer_specs(cfg, True))
+    return specs
+
+
+def _apply_layer(cfg, x, lp, moe_layer, *, positions, cache=None, cache_pos=None):
+    from . import layers as L
+    h_in = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if _uses_mla(cfg):
+        h, new_cache = mla_attention(h_in, lp["attn"], cfg,
+                                     positions=positions, cache=cache,
+                                     cache_pos=cache_pos)
+    else:
+        h, new_cache = L.attention(h_in, lp["attn"], cfg, positions=positions,
+                                   cache=cache, cache_pos=cache_pos)
+    x = x + h
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if moe_layer:
+        y, aux = moe_ffn(h2, lp["moe"], cfg)
+    else:
+        y, aux = L.mlp(h2, lp["mlp"]), jnp.float32(0.0)
+    return x + y, aux, new_cache
+
+
+def _plan(cfg: ModelConfig):
+    """Compile-friendly execution plan.
+
+    Returns (n_prefix_dense, n_super, dense_per_super). Layer order:
+      [first_dense dense] + n_super × [1 moe + (moe_every-1) dense].
+    Supports the assigned patterns (deepseek: prefix 1 + all-moe;
+    llama4: alternating moe/dense). Scanning super-layers keeps the HLO one
+    moe + a few dense bodies regardless of depth.
+    """
+    m = cfg.moe
+    rest = cfg.n_layers - m.first_dense
+    assert rest % m.moe_every == 0, (
+        f"n_layers-first_dense ({rest}) must divide moe_every ({m.moe_every})")
+    return m.first_dense, rest // m.moe_every, m.moe_every - 1
+
+
+def _cast(tree, compute_dtype):
+    return jax.tree.map(
+        lambda a: a.astype(compute_dtype) if a.dtype != jnp.float32 else a, tree)
+
+
+def _remat_wrap(body, remat):
+    if remat == "full":
+        return jax.checkpoint(body)
+    if remat == "dots":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return body
+
+
+def forward(params, cfg: ModelConfig, tokens, *, compute_dtype=jnp.bfloat16,
+            remat: str = "full", prefix_embeds=None, return_aux=False):
+    from .layers import embed_tokens, lm_logits
+    h = embed_tokens(params["embed"], tokens).astype(compute_dtype)
+    positions = jnp.arange(h.shape[1])
+    aux_total = jnp.float32(0.0)
+    n_prefix, n_super, dense_per_super = _plan(cfg)
+
+    def dense_body(x, lp):
+        lp = _cast(lp, compute_dtype)
+        x, aux, _ = _apply_layer(cfg, x, lp, False, positions=positions)
+        return x, aux
+
+    def super_body(x, lps):
+        moe_lp, dense_lps = lps
+        moe_lp = _cast(moe_lp, compute_dtype)
+        x, aux, _ = _apply_layer(cfg, x, moe_lp, True, positions=positions)
+        if dense_per_super:
+            def inner(xx, dlp):
+                dlp = _cast(dlp, compute_dtype)
+                xx, a2, _ = _apply_layer(cfg, xx, dlp, False,
+                                         positions=positions)
+                return xx, a2
+            x, a2s = jax.lax.scan(inner, x, dense_lps)
+            aux = aux + jnp.sum(a2s)
+        return x, aux
+
+    dense = params.get("dense_layers")
+    if n_prefix:
+        pre = jax.tree.map(lambda a: a[:n_prefix], dense)
+        h, auxs = jax.lax.scan(_remat_wrap(dense_body, remat), h, pre)
+        aux_total = aux_total + jnp.sum(auxs)
+
+    moe_stack = params["moe_layers"]
+    if dense_per_super:
+        rest = jax.tree.map(
+            lambda a: a[n_prefix:].reshape(n_super, dense_per_super,
+                                           *a.shape[1:]), dense)
+    else:
+        rest = None
+    h, auxs = jax.lax.scan(_remat_wrap(super_body, remat), h,
+                           (moe_stack, rest))
+    aux_total = aux_total + jnp.sum(auxs)
+
+    h = rms_norm(h, params["ln_f"].astype(compute_dtype), cfg.norm_eps)
+    logits = lm_logits(params["embed"], h.astype(jnp.float32))
+    if return_aux:
+        return logits, aux_total
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch, max_len, dtype=jnp.bfloat16):
+    from . import layers as L
+    if _uses_mla(cfg):
+        one = init_mla_cache(cfg, batch, max_len, dtype)
+    else:
+        one = L.init_attention_cache(cfg, batch, max_len, dtype)
+    n_prefix, n_super, dps = _plan(cfg)
+
+    def rep(a, *lead):
+        return jnp.broadcast_to(a[(None,) * len(lead)], tuple(lead) + a.shape)
+
+    cache = {"moe": jax.tree.map(lambda a: rep(a, n_super), one)}
+    if n_prefix:
+        cache["prefix"] = jax.tree.map(lambda a: rep(a, n_prefix), one)
+    if dps:
+        cache["dense"] = jax.tree.map(lambda a: rep(a, n_super, dps), one)
+    return cache
+
+
+def cache_specs(cfg: ModelConfig):
+    from . import layers as L
+    base = mla_cache_specs(cfg) if _uses_mla(cfg) else L.attention_cache_specs(cfg)
+    n_prefix, _n_super, dps = _plan(cfg)
+    leaf = lambda s: isinstance(s, tuple)
+    stack1 = jax.tree.map(lambda s: ("layers",) + tuple(s), base, is_leaf=leaf)
+    stack2 = jax.tree.map(lambda s: ("layers", None) + tuple(s), base,
+                          is_leaf=leaf)
+    specs = {"moe": stack1}
+    if n_prefix:
+        specs["prefix"] = stack1
+    if dps:
+        specs["dense"] = stack2
+    return specs
+
+
+def _serve_scan(params, cfg, h, cache, pos, compute_dtype):
+    """Group-scanned serving pass mirroring forward()'s plan."""
+    n_prefix, n_super, dps = _plan(cfg)
+    positions = pos + jnp.arange(h.shape[1])
+    new_cache = dict(cache)
+    dense = params.get("dense_layers")
+
+    if n_prefix:
+        pre = jax.tree.map(lambda a: a[:n_prefix], dense)
+
+        def pre_body(x, scanned):
+            lp, lc = scanned
+            lp = _cast(lp, compute_dtype)
+            x, _aux, nc = _apply_layer(cfg, x, lp, False, positions=positions,
+                                       cache=lc, cache_pos=pos)
+            return x, nc
+
+        h, nc = jax.lax.scan(pre_body, h, (pre, cache["prefix"]))
+        new_cache["prefix"] = nc
+
+    moe_stack = params["moe_layers"]
+    rest = (jax.tree.map(
+        lambda a: a[n_prefix:].reshape(n_super, dps, *a.shape[1:]), dense)
+        if dps else None)
+
+    def super_body(x, scanned):
+        moe_lp, dense_lps, moe_lc, dense_lcs = scanned
+        moe_lp = _cast(moe_lp, compute_dtype)
+        x, _aux, moe_nc = _apply_layer(cfg, x, moe_lp, True,
+                                       positions=positions, cache=moe_lc,
+                                       cache_pos=pos)
+        if dps:
+            def inner(xx, sc):
+                dlp, dlc = sc
+                dlp = _cast(dlp, compute_dtype)
+                xx, _a, nc = _apply_layer(cfg, xx, dlp, False,
+                                          positions=positions, cache=dlc,
+                                          cache_pos=pos)
+                return xx, nc
+            x, dense_ncs = jax.lax.scan(inner, x, (dense_lps, dense_lcs))
+        else:
+            dense_ncs = dense_lcs
+        return x, (moe_nc, dense_ncs)
+
+    h, (moe_nc, dense_ncs) = jax.lax.scan(
+        super_body, h,
+        (moe_stack, rest, cache["moe"], cache.get("dense")))
+    new_cache["moe"] = moe_nc
+    if dps:
+        new_cache["dense"] = dense_ncs
+    return h, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos,
+                *, compute_dtype=jnp.bfloat16):
+    from .layers import embed_tokens, lm_logits
+    h = embed_tokens(params["embed"], tokens).astype(compute_dtype)
+    h, cache = _serve_scan(params, cfg, h, cache, pos, compute_dtype)
+    h = rms_norm(h, params["ln_f"].astype(compute_dtype), cfg.norm_eps)
+    return lm_logits(params["embed"], h.astype(jnp.float32)), cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len,
+            *, compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16):
+    from .layers import embed_tokens, lm_logits
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len, cache_dtype)
+    h = embed_tokens(params["embed"], tokens).astype(compute_dtype)
+    h, cache = _serve_scan(params, cfg, h, cache, jnp.int32(0), compute_dtype)
+    h = rms_norm(h, params["ln_f"].astype(compute_dtype), cfg.norm_eps)
+    return lm_logits(params["embed"], h.astype(jnp.float32)), cache

@@ -1,0 +1,337 @@
+"""Mamba2 (SSD — state-space duality) blocks, pure JAX.
+
+Training/prefill uses the *chunked SSD* algorithm (Dao & Gu 2024): the
+sequence is split into Q-length chunks; within-chunk terms become dense
+(q, q) matmuls (MXU-friendly — this is the TPU adaptation of the SSD scan)
+and cross-chunk terms are a tiny associative scan over chunk states.
+Decode carries (state (b, h, p, n), conv buffer) — O(1) per token.
+
+Shapes: b=batch s=seq h=ssm heads p=head_dim n=d_state g=groups(1) q=chunk.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, SSMConfig
+from ..distributed.sharding import constrain
+from .layers import dense_init, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.d_state          # x, B, C go through the conv
+    return s, d_inner, n_heads, conv_dim
+
+
+def init_mamba_block(key, cfg: ModelConfig, dtype=jnp.float32):
+    s, d_inner, h, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * s.d_state + h    # z, x, B, C, dt
+    dt = jnp.exp(
+        jax.random.uniform(ks[2], (h,), jnp.float32)
+        * (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))     # inverse softplus
+    return {
+        "ln": jnp.ones((cfg.d_model,), dtype),
+        "in_proj": dense_init(ks[0], (cfg.d_model, in_dim), cfg.d_model, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": dt_bias.astype(dtype),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)).astype(dtype),
+        "d_skip": jnp.ones((h,), dtype),
+        "norm": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[3], (d_inner, cfg.d_model), d_inner, dtype),
+    }
+
+
+def mamba_block_specs(cfg: ModelConfig):
+    return {
+        "ln": ("embed",),
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "dt_bias": ("ssm_heads",),
+        "a_log": ("ssm_heads",),
+        "d_skip": ("ssm_heads",),
+        "norm": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    s, d_inner, h, _ = _dims(cfg)
+    z, x, b_ssm, c_ssm, dt = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + s.d_state,
+         2 * d_inner + 2 * s.d_state],
+        axis=-1,
+    )
+    return z, x, b_ssm, c_ssm, dt
+
+
+def _segsum(x):
+    """x (..., q, h) -> (..., h, q, q) lower-triangular pairwise sums
+    seg[i, j] = sum_{j < t <= i} x_t   (i >= j), -inf above the diagonal."""
+    q = x.shape[-2]
+    cs = jnp.cumsum(x, axis=-2)                          # (..., q, h)
+    cs = jnp.moveaxis(cs, -1, -2)                        # (..., h, q)
+    diff = cs[..., :, None] - cs[..., None, :]           # (..., h, q, q)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b_ssm, c_ssm, *, chunk):
+    """Chunked SSD. x (b,s,h,p), dt (b,s,h), a (h,)<0 via -exp(a_log),
+    b_ssm/c_ssm (b,s,n). Returns y (b,s,h,p) and final state (b,h,p,n)."""
+    bsz, s, h, p = x.shape
+    n = b_ssm.shape[-1]
+    q = min(chunk, s)
+    s_orig = s
+    if s % q:
+        # pad with zero-input steps: dt=0 gives unit decay and no state
+        # contribution, so outputs/states for real positions are unchanged
+        pad = q - s % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_ssm = jnp.pad(b_ssm, ((0, 0), (0, pad), (0, 0)))
+        c_ssm = jnp.pad(c_ssm, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // q
+
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h)
+    bc = b_ssm.reshape(bsz, nc, q, n)
+    cc = c_ssm.reshape(bsz, nc, q, n)
+
+    da = dtc * a                                          # (b,c,q,h)
+    xdt = xc * dtc[..., None]                             # (b,c,q,h,p)
+
+    # --- diagonal (within-chunk) term: dense (q, q) matmuls on the MXU
+    l_mat = jnp.exp(_segsum(da))                          # (b,c,h,q,q)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)        # (b,c,q,q)
+    m = scores[:, :, None] * l_mat                        # (b,c,h,q,q)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", m, xdt)
+
+    # --- chunk summary states: S_c = sum_j exp(cs_end - cs_j) B_j x_j^T
+    cs = jnp.cumsum(da, axis=2)                           # (b,c,q,h)
+    decay_end = jnp.exp(cs[:, :, -1:, :] - cs)            # (b,c,q,h)
+    s_chunk = jnp.einsum("bcqn,bcqhp->bchpn", bc, xdt * decay_end[..., None])
+
+    # --- inter-chunk recurrence (associative scan over nc chunks)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                # (b,c,h)
+
+    def combine(left, right):
+        d1, s1 = left
+        d2, s2 = right
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    dec_scan, st_scan = jax.lax.associative_scan(
+        combine, (jnp.moveaxis(chunk_decay, 1, 0),
+                  jnp.moveaxis(s_chunk, 1, 0)), axis=0)
+    # state at START of chunk c = scanned state up to c-1 (shift by one)
+    st_incl = jnp.moveaxis(st_scan, 0, 1)                 # (b,c,h,p,n) inclusive
+    h0 = jnp.zeros_like(st_incl[:, :1])
+    h_start = jnp.concatenate([h0, st_incl[:, :-1]], axis=1)
+
+    # --- off-diagonal term: y_off[i] = (C_i · H_start) * exp(cs_i)
+    y_off = jnp.einsum("bcqn,bchpn->bcqhp", cc, h_start) \
+        * jnp.exp(cs)[..., None]
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)[:, :s_orig]
+    final_state = st_incl[:, -1]                          # (b,h,p,n)
+    return y, final_state
+
+
+def mamba_forward(params, cfg: ModelConfig, u, *, chunk=None,
+                  return_cache=False):
+    """Full-sequence Mamba2 block. u (b,s,d_model) -> (b,s,d_model).
+
+    ``return_cache`` also returns the decode cache (conv tail + final state)
+    so prefill can hand off to the recurrent decode path.
+    """
+    s_cfg, d_inner, h, conv_dim = _dims(cfg)
+    q = chunk or s_cfg.chunk
+    res = u
+    u = rms_norm(u, params["ln"], cfg.norm_eps)
+    zxbcdt = u @ params["in_proj"]
+    z, x, b_ssm, c_ssm, dt = _split_proj(cfg, zxbcdt)
+
+    # depthwise causal conv over (x, B, C)
+    xbc_pre = jnp.concatenate([x, b_ssm, c_ssm], axis=-1)  # (b,s,conv_dim)
+    w = params["conv_w"]                                   # (d_conv, conv_dim)
+    pad = w.shape[0] - 1
+    xbc_p = jnp.pad(xbc_pre, ((0, 0), (pad, 0), (0, 0)))
+    conv = sum(
+        xbc_p[:, i : i + xbc_pre.shape[1]] * w[i][None, None]
+        for i in range(w.shape[0])
+    ) + params["conv_b"]
+    xbc = jax.nn.silu(conv)
+    x, b_ssm, c_ssm = jnp.split(xbc, [d_inner, d_inner + s_cfg.d_state],
+                                axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = x.reshape(*x.shape[:2], h, s_cfg.head_dim)
+    xh = constrain(xh, "batch", "seq", "ssm_heads", None)
+    y, final_state = ssd_chunked(
+        xh.astype(jnp.float32), dt, a,
+        b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32), chunk=q)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    out = res + constrain(out, "batch", "seq", "embed")
+    if return_cache:
+        cache = {"conv": xbc_pre[:, -(s_cfg.d_conv - 1):].astype(jnp.float32),
+                 "state": final_state}
+        return out, cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode (recurrent, O(1) per token)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_cache(cfg: ModelConfig, batch, dtype=jnp.float32):
+    s, d_inner, h, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, h, s.head_dim, s.d_state), dtype),
+    }
+
+
+def mamba_cache_specs(cfg: ModelConfig):
+    return {
+        "conv": ("batch", None, "ssm_inner"),
+        "state": ("batch", "ssm_heads", None, None),
+    }
+
+
+def mamba_decode_step(params, cfg: ModelConfig, u, cache):
+    """u (b, 1, d_model); cache {conv (b, k-1, conv_dim), state (b,h,p,n)}."""
+    s_cfg, d_inner, h, conv_dim = _dims(cfg)
+    res = u
+    un = rms_norm(u, params["ln"], cfg.norm_eps)
+    zxbcdt = un @ params["in_proj"]
+    z, x, b_ssm, c_ssm, dt = _split_proj(cfg, zxbcdt)
+
+    xbc_new = jnp.concatenate([x, b_ssm, c_ssm], axis=-1)[:, 0]  # (b, conv_dim)
+    hist = jnp.concatenate([cache["conv"],
+                            xbc_new[:, None].astype(cache["conv"].dtype)],
+                           axis=1)                         # (b, k, conv_dim)
+    w = params["conv_w"]
+    conv = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                      w.astype(jnp.float32)) + params["conv_b"]
+    xbc = jax.nn.silu(conv)
+    x1, b1, c1 = jnp.split(xbc, [d_inner, d_inner + s_cfg.d_state], axis=-1)
+
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))  # (b,h)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))               # (h,)
+    da = jnp.exp(dt1 * a)                                           # (b,h)
+    xh = x1.reshape(-1, h, s_cfg.head_dim).astype(jnp.float32)      # (b,h,p)
+    # state' = exp(dt a) state + dt * x ⊗ B
+    new_state = cache["state"] * da[..., None, None] \
+        + jnp.einsum("bhp,bn,bh->bhpn", xh, b1.astype(jnp.float32), dt1)
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c1.astype(jnp.float32))
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(-1, 1, d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    new_cache = {"conv": hist[:, 1:], "state": new_state}
+    return res + out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full mamba2 LM (mamba2-780m)
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    from .layers import init_embed
+    ke, kl = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_mamba_block(k, cfg, dtype))(layer_keys)
+    return {
+        "embed": init_embed(ke, cfg, dtype),
+        "layers": stacked,
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    from .layers import embed_specs
+    stack = jax.tree.map(lambda s: ("layers",) + tuple(s),
+                         mamba_block_specs(cfg),
+                         is_leaf=lambda s: isinstance(s, tuple))
+    return {"embed": embed_specs(cfg), "layers": stack, "ln_f": ("embed",)}
+
+
+def forward(params, cfg: ModelConfig, tokens, *, compute_dtype=jnp.bfloat16,
+            remat: str = "full", prefix_embeds=None):
+    from .layers import embed_tokens, lm_logits
+    h = embed_tokens(params["embed"], tokens).astype(compute_dtype)
+
+    def body(x, lp):
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp)
+        return mamba_forward(lp, cfg, x), None
+
+    if remat in ("full", "dots"):
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    h = rms_norm(h, params["ln_f"].astype(compute_dtype), cfg.norm_eps)
+    return lm_logits(params["embed"], h.astype(jnp.float32))
+
+
+def init_cache(cfg: ModelConfig, batch, max_len, dtype=jnp.float32):
+    del max_len  # O(1) state
+    one = init_mamba_cache(cfg, batch, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one)
+
+
+def cache_specs(cfg: ModelConfig):
+    return jax.tree.map(lambda s: ("layers",) + tuple(s),
+                        mamba_cache_specs(cfg),
+                        is_leaf=lambda s: isinstance(s, tuple))
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos,
+                *, compute_dtype=jnp.bfloat16):
+    from .layers import embed_tokens, lm_logits
+    del pos  # state is position-free
+    h = embed_tokens(params["embed"], tokens).astype(compute_dtype)
+
+    def body(x, scanned):
+        lp, lc = scanned
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp)
+        x, nc = mamba_decode_step(lp, cfg, x, lc)
+        return x, nc
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+    h = rms_norm(h, params["ln_f"].astype(compute_dtype), cfg.norm_eps)
+    return lm_logits(params["embed"], h.astype(jnp.float32)), new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len,
+            *, compute_dtype=jnp.bfloat16, cache_dtype=jnp.float32):
+    """Full-sequence forward returning logits + per-layer decode cache."""
+    del max_len  # O(1) state
+    from .layers import embed_tokens, lm_logits
+    h = embed_tokens(params["embed"], tokens).astype(compute_dtype)
+
+    def body(x, lp):
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp)
+        x, cache = mamba_forward(lp, cfg, x, return_cache=True)
+        return x, jax.tree.map(lambda a: a.astype(cache_dtype), cache)
+
+    h, cache = jax.lax.scan(body, h, params["layers"])
+    h = rms_norm(h, params["ln_f"].astype(compute_dtype), cfg.norm_eps)
+    return lm_logits(params["embed"], h.astype(jnp.float32)), cache

@@ -1,0 +1,168 @@
+"""Dense decoder-only transformer LM (granite / stablelm / danube / qwen and
+the paligemma text backbone). Scan-over-layers + configurable remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from . import layers as L
+
+
+def gated(cfg: ModelConfig) -> bool:
+    return "mlp_nogate" not in cfg.notes
+
+
+def init_layer(key, cfg: ModelConfig, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_attention(k1, cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": L.init_mlp(k2, cfg, dtype, gated=gated(cfg)),
+    }
+
+
+def layer_specs(cfg: ModelConfig):
+    return {
+        "ln1": ("embed",),
+        "attn": L.attention_specs(cfg),
+        "ln2": ("embed",),
+        "mlp": L.mlp_specs(gated=gated(cfg)),
+    }
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    ke, kl, kf = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg, dtype))(layer_keys)
+    return {
+        "embed": L.init_embed(ke, cfg, dtype),
+        "layers": stacked,
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    def stack(spec_tree):
+        return jax.tree.map(lambda s: ("layers",) + tuple(s), spec_tree,
+                            is_leaf=lambda s: isinstance(s, tuple))
+    return {
+        "embed": L.embed_specs(cfg),
+        "layers": stack(layer_specs(cfg)),
+        "ln_f": ("embed",),
+    }
+
+
+def _layer_apply(cfg, x, lp, *, positions, prefix_len, cache=None,
+                 cache_pos=None):
+    h, new_cache = L.attention(
+        L.rms_norm(x, lp["ln1"], cfg.norm_eps), lp["attn"], cfg,
+        positions=positions, prefix_len=prefix_len,
+        cache=cache, cache_pos=cache_pos,
+    )
+    x = x + h
+    x = x + L.mlp(L.rms_norm(x, lp["ln2"], cfg.norm_eps), lp["mlp"])
+    return x, new_cache
+
+
+def forward_embeds(
+    params, cfg: ModelConfig, h, *, prefix_len=0,
+    compute_dtype=jnp.bfloat16, remat: str = "full",
+):
+    """(b, s, e) embeddings -> (b, s, e) final hidden states."""
+    h = h.astype(compute_dtype)
+    positions = jnp.arange(h.shape[1])
+
+    def body(x, lp):
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp)
+        x, _ = _layer_apply(cfg, x, lp, positions=positions,
+                            prefix_len=prefix_len)
+        return x, None
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return L.rms_norm(h, params["ln_f"].astype(compute_dtype), cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, compute_dtype=jnp.bfloat16,
+            remat: str = "full", prefix_embeds=None):
+    """tokens (b, s) -> logits (b, s, v). ``prefix_embeds`` (b, p, e) are
+    prepended bidirectional positions (VLM/audio stub frontends)."""
+    h = L.embed_tokens(params["embed"], tokens)
+    prefix_len = 0
+    if prefix_embeds is not None:
+        prefix_len = prefix_embeds.shape[1]
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    h = forward_embeds(params, cfg, h, prefix_len=prefix_len,
+                       compute_dtype=compute_dtype, remat=remat)
+    if prefix_len:
+        h = h[:, prefix_len:]
+    return L.lm_logits(params["embed"], h.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with a stacked KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch, max_len, dtype=jnp.bfloat16):
+    one = L.init_attention_cache(cfg, batch, max_len, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one)
+
+
+def cache_specs(cfg: ModelConfig):
+    return jax.tree.map(lambda s: ("layers",) + tuple(s),
+                        L.attention_cache_specs(cfg),
+                        is_leaf=lambda s: isinstance(s, tuple))
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos,
+                *, compute_dtype=jnp.bfloat16):
+    """One token step. tokens (b, 1); cache stacked (L, b, S, kv, hd);
+    pos scalar int32 — current write position. Returns (logits, cache)."""
+    h = L.embed_tokens(params["embed"], tokens).astype(compute_dtype)
+    positions = pos + jnp.arange(tokens.shape[1])
+
+    def body(x, scanned):
+        lp, lc = scanned
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp)
+        x, nc = _layer_apply(cfg, x, lp, positions=positions, prefix_len=0,
+                             cache=lc, cache_pos=pos)
+        return x, nc
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+    h = L.rms_norm(h, params["ln_f"].astype(compute_dtype), cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], h.astype(jnp.float32))
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len,
+            *, compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16):
+    """Full-sequence forward that also fills the KV cache."""
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len, cache_dtype)
+    h = L.embed_tokens(params["embed"], tokens).astype(compute_dtype)
+    positions = jnp.arange(s)
+
+    def body(x, scanned):
+        lp, lc = scanned
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp)
+        x, nc = _layer_apply(cfg, x, lp, positions=positions, prefix_len=0,
+                             cache=lc, cache_pos=0)
+        return x, nc
+
+    h, cache = jax.lax.scan(body, h, (params["layers"], cache))
+    h = L.rms_norm(h, params["ln_f"].astype(compute_dtype), cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], h.astype(jnp.float32))
+    return logits, cache

@@ -1,0 +1,70 @@
+"""PaliGemma-style VLM backbone: gemma decoder with an image-embedding prefix.
+
+The SigLIP vision tower is a STUB per the assignment: ``input_specs()``
+provides precomputed patch embeddings (b, n_patches, d_model) that are
+prepended to the text tokens with bidirectional (prefix-LM) attention; text
+positions attend causally. Decode runs against a cache whose first
+``n_prefix_tokens`` positions were filled by the image prefix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from . import transformer as T
+from .layers import rms_norm
+
+init_params = T.init_params
+param_specs = T.param_specs
+init_cache = T.init_cache
+cache_specs = T.cache_specs
+
+
+def forward(params, cfg: ModelConfig, batch, *, compute_dtype=jnp.bfloat16,
+            remat: str = "full"):
+    """batch = {"image_embeds": (b, p, d), "tokens": (b, s)} -> text logits."""
+    return T.forward(params, cfg, batch["tokens"],
+                     compute_dtype=compute_dtype, remat=remat,
+                     prefix_embeds=batch["image_embeds"])
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len,
+            *, compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16):
+    """Prefill over [image prefix + text tokens]; returns (logits, cache).
+
+    Cache positions [0, p) hold the image prefix keys/values.
+    """
+    img = batch["image_embeds"]
+    tokens = batch["tokens"]
+    b, p = img.shape[:2]
+    s = tokens.shape[1]
+    cache = T.init_cache(cfg, b, max_len, cache_dtype)
+
+    h_img = img.astype(compute_dtype)
+    h_txt = L.embed_tokens(params["embed"], tokens).astype(compute_dtype)
+    h = jnp.concatenate([h_img, h_txt], axis=1)
+    positions = jnp.arange(p + s)
+
+    def body(x, scanned):
+        lp, lc = scanned
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp)
+        hh, nc = L.attention(
+            rms_norm(x, lp["ln1"], cfg.norm_eps), lp["attn"], cfg,
+            positions=positions, prefix_len=p, cache=lc,
+            cache_pos=jnp.int32(0))
+        x = x + hh
+        x = x + L.mlp(rms_norm(x, lp["ln2"], cfg.norm_eps), lp["mlp"])
+        return x, nc
+
+    h, cache = jax.lax.scan(body, h, (params["layers"], cache))
+    h = rms_norm(h[:, p:], params["ln_f"].astype(compute_dtype), cfg.norm_eps)
+    return L.lm_logits(params["embed"], h.astype(jnp.float32)), cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos,
+                *, compute_dtype=jnp.bfloat16):
+    """pos counts [prefix + generated] positions (cache write offset)."""
+    return T.decode_step(params, cfg, tokens, cache, pos,
+                         compute_dtype=compute_dtype)

@@ -1,0 +1,7 @@
+from .optimizer import AdamWState, adamw_init, adamw_update, lr_schedule
+from .train_step import build_train_step, loss_fn
+
+__all__ = [
+    "adamw_init", "adamw_update", "AdamWState", "lr_schedule",
+    "build_train_step", "loss_fn",
+]

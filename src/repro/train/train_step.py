@@ -1,0 +1,115 @@
+"""pjit-able train step builder: loss, microbatched grad accumulation, AdamW.
+
+``build_train_step(cfg, tcfg)`` returns a pure function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+suitable for jax.jit with in/out shardings from distributed.sharding rules.
+Microbatching splits the per-step batch into ``tcfg.microbatch`` slices and
+accumulates grads with a lax.scan (keeps activation memory ∝ one microbatch).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, TrainConfig
+from ..distributed.sharding import constrain
+from ..models import get_api
+from .compression import compress_decompress
+from .optimizer import adamw_update
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def softmax_xent(logits, labels, z_loss=0.0):
+    """Mean token cross-entropy (+ z-loss) in f32. logits (b,s,v)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss
+
+
+def loss_fn(params, cfg: ModelConfig, batch, tcfg: TrainConfig):
+    api = get_api(cfg)
+    kw = dict(compute_dtype=_dtype(tcfg.compute_dtype), remat=tcfg.remat)
+    if cfg.family == "moe":
+        logits, aux = api.forward(params, cfg, batch, return_aux=True, **kw)
+    else:
+        logits, aux = api.forward(params, cfg, batch, **kw), 0.0
+    loss = softmax_xent(logits, batch["labels"], tcfg.z_loss)
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+def _split_microbatches(batch, n):
+    def f(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by microbatch {n}"
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(f, batch)
+
+
+def build_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(p, cfg, b, tcfg), has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatch and tcfg.microbatch > 1:
+            mb = _split_microbatches(batch, tcfg.microbatch)
+
+            def acc_body(carry, mbatch):
+                gsum, lsum = carry
+                (l, _aux), g = grad_fn(params, mbatch)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (g0, 0.0), mb)
+            inv = 1.0 / tcfg.microbatch
+            grads = jax.tree.map(lambda g: g * inv, gsum)
+            loss = lsum * inv
+        else:
+            (loss, _aux), grads = grad_fn(params, batch)
+
+        if tcfg.gradient_compression:
+            grads, comp_err = compress_decompress(grads)
+        params2, opt2, om = adamw_update(params, grads, opt_state, tcfg)
+        metrics = {"loss": loss, **om}
+        return params2, opt2, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serve steps (used by launch/serve.py and the dry-run decode cells)
+# ---------------------------------------------------------------------------
+
+
+def build_decode_step(cfg: ModelConfig, compute_dtype=jnp.bfloat16):
+    api = get_api(cfg)
+
+    def serve_step(params, tokens, cache, pos, extras=None):
+        logits, cache = api.decode_step(params, cfg, tokens, cache, pos,
+                                        extras, compute_dtype=compute_dtype)
+        # mask vocab-padding columns (embedding table is padded to 128)
+        logits = logits[..., : cfg.vocab_size]
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+def build_prefill(cfg: ModelConfig, max_len: int, compute_dtype=jnp.bfloat16):
+    api = get_api(cfg)
+
+    def prefill_step(params, batch):
+        return api.prefill(params, cfg, batch, max_len,
+                           compute_dtype=compute_dtype)
+
+    return prefill_step

@@ -1,0 +1,147 @@
+"""Unit + behaviour tests for the core PIC/GPIC algorithm."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    adjusted_rand_index,
+    affinity_chunked,
+    affinity_matrix,
+    degree_matrix_free,
+    matvec_matrix_free,
+    pic_from_affinity,
+    pic_reference,
+    pic_serial_numpy,
+    row_normalize_features,
+)
+from repro.data import cassini, gaussians, shapes, smiley, three_circles, two_moons
+
+
+class TestAffinity:
+    def test_cosine_symmetric_zero_diag(self):
+        x = jax.random.normal(jax.random.key(0), (64, 5))
+        a = affinity_matrix(x, "cosine")
+        np.testing.assert_allclose(a, a.T, atol=1e-6)
+        np.testing.assert_allclose(np.diag(np.asarray(a)), 0.0, atol=1e-7)
+
+    def test_cosine_shifted_nonneg(self):
+        x = jax.random.normal(jax.random.key(1), (64, 3))
+        a = affinity_matrix(x, "cosine_shifted")
+        assert float(jnp.min(a)) >= -1e-6
+
+    def test_rbf_range(self):
+        x = jax.random.normal(jax.random.key(2), (64, 2))
+        a = affinity_matrix(x, "rbf", sigma=0.5)
+        assert float(jnp.min(a)) >= 0.0
+        assert float(jnp.max(a)) <= 1.0 + 1e-6
+
+    @pytest.mark.parametrize("kind", ["cosine", "cosine_shifted", "rbf"])
+    def test_chunked_matches_dense(self, kind):
+        x = jax.random.normal(jax.random.key(3), (100, 4))
+        dense = affinity_matrix(x, kind, sigma=0.7)
+        chunked = affinity_chunked(x, kind, sigma=0.7, chunk=33)
+        np.testing.assert_allclose(dense, chunked, atol=1e-5)
+
+    @pytest.mark.parametrize("kind", ["cosine", "cosine_shifted"])
+    def test_matrix_free_matvec_exact(self, kind):
+        """O2: factored A·v must equal the explicit product (DESIGN.md §2)."""
+        x = jax.random.normal(jax.random.key(4), (80, 6))
+        xn = row_normalize_features(x)
+        a = affinity_matrix(x, kind)
+        v = jax.random.uniform(jax.random.key(5), (80,))
+        np.testing.assert_allclose(
+            a @ v, matvec_matrix_free(xn, v, kind), atol=2e-4, rtol=1e-4
+        )
+
+    def test_matrix_free_degree(self):
+        x = jax.random.normal(jax.random.key(6), (50, 3))
+        xn = row_normalize_features(x)
+        a = affinity_matrix(x, "cosine_shifted")
+        np.testing.assert_allclose(
+            jnp.sum(a, axis=1),
+            degree_matrix_free(xn, "cosine_shifted"),
+            atol=2e-4, rtol=1e-4,
+        )
+
+
+class TestPICBehaviour:
+    @pytest.mark.parametrize(
+        "gen,k,sigma",
+        [
+            (three_circles, 3, 0.3),
+            (cassini, 3, 0.3),
+            (gaussians, 4, 0.3),
+            (shapes, 4, 0.3),
+            (smiley, 4, 0.15),
+        ],
+    )
+    def test_clusters_separable_datasets(self, gen, k, sigma):
+        x, y = gen(480, seed=0)
+        res = pic_reference(
+            jnp.asarray(x), k, key=jax.random.key(1),
+            affinity_kind="rbf", sigma=sigma, max_iter=400,
+        )
+        ari = adjusted_rand_index(y, np.asarray(res.labels))
+        assert ari >= 0.9, f"ARI {ari:.3f} too low"
+
+    def test_moons_multivector(self):
+        x, y = two_moons(480, seed=0)
+        res = pic_reference(
+            jnp.asarray(x), 2, key=jax.random.key(1),
+            affinity_kind="rbf", sigma=0.25, max_iter=400, n_vectors=4,
+        )
+        ari = adjusted_rand_index(y, np.asarray(res.labels))
+        assert ari >= 0.4
+
+    def test_stops_by_epsilon(self):
+        x, _ = gaussians(200, seed=0)
+        res = pic_reference(
+            jnp.asarray(x), 4, key=jax.random.key(0),
+            affinity_kind="rbf", sigma=0.3, max_iter=500,
+        )
+        assert bool(res.converged)
+        assert int(res.n_iter) < 500
+
+    def test_embedding_l1_normalized(self):
+        x, _ = gaussians(128, seed=1)
+        res = pic_reference(jnp.asarray(x), 4, key=jax.random.key(0),
+                            affinity_kind="rbf", sigma=0.3)
+        assert abs(float(jnp.sum(jnp.abs(res.embedding))) - 1.0) < 1e-4
+
+    def test_serial_numpy_matches_jax_embedding(self):
+        """Paper claim: the parallel method converges to the same result."""
+        x, _ = gaussians(160, seed=2)
+        _, v_serial, _ = pic_serial_numpy(
+            x, 4, affinity_kind="rbf", sigma=0.3, max_iter=100,
+            return_timings=True,
+        )
+        a = affinity_matrix(jnp.asarray(x), "rbf", sigma=0.3)
+        res = pic_from_affinity(a, 4, key=jax.random.key(0), max_iter=100)
+        np.testing.assert_allclose(
+            v_serial, np.asarray(res.embedding), atol=1e-5, rtol=1e-3
+        )
+
+    def test_serial_affinity_dominates(self):
+        """Table 1 structure: the O(n^2 m) affinity stage dominates the serial
+        runtime (the paper reports 73-99 %). With m=2 and BLAS rows the margin
+        is noise-thin, so exercise the general m=16 case (random lift)."""
+        x, _ = two_moons(2500, seed=0)
+        rng = np.random.default_rng(0)
+        lift = rng.standard_normal((2, 32)).astype(np.float32)
+        x32 = x @ lift
+        _, _, tm = pic_serial_numpy(x32, 2, affinity_kind="cosine_shifted",
+                                    max_iter=3, return_timings=True)
+        assert tm["affinity_s"] > 0.5 * (tm["affinity_s"] + tm["power_s"])
+
+
+class TestPermutationInvariance:
+    def test_labels_permute_with_input(self):
+        x, _ = gaussians(180, seed=3)
+        perm = np.random.default_rng(0).permutation(180)
+        r1 = pic_reference(jnp.asarray(x), 4, key=jax.random.key(0),
+                           affinity_kind="rbf", sigma=0.3, max_iter=300)
+        r2 = pic_reference(jnp.asarray(x[perm]), 4, key=jax.random.key(0),
+                           affinity_kind="rbf", sigma=0.3, max_iter=300)
+        ari = adjusted_rand_index(np.asarray(r1.labels)[perm], np.asarray(r2.labels))
+        assert ari >= 0.95

@@ -1,0 +1,44 @@
+"""Tests for the synthetic dataset generators + balanced subsampling."""
+import numpy as np
+import pytest
+
+from repro.data import dataset_by_name
+from repro.data.synthetic import subsample_balanced
+
+ALL = ["two_moons", "three_circles", "cassini", "gaussians", "shapes", "smiley"]
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_shapes_and_balance(name):
+    x, y, k = dataset_by_name(name, 999, seed=0)
+    assert x.shape == (999, 2)
+    assert x.dtype == np.float32
+    assert y.shape == (999,)
+    assert set(np.unique(y)) == set(range(k))
+    counts = np.bincount(y)
+    assert counts.max() - counts.min() <= k  # near-balanced
+    assert np.isfinite(x).all()
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_deterministic_given_seed(name):
+    x1, y1, _ = dataset_by_name(name, 256, seed=7)
+    x2, y2, _ = dataset_by_name(name, 256, seed=7)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    x3, _, _ = dataset_by_name(name, 256, seed=8)
+    assert not np.array_equal(x1, x3)
+
+
+def test_subsample_balanced_fraction():
+    x, y, k = dataset_by_name("gaussians", 4000, seed=0)
+    xs, ys = subsample_balanced(x, y, 0.1, seed=1)
+    assert abs(len(ys) - 400) <= k
+    counts = np.bincount(ys, minlength=k)
+    assert counts.max() - counts.min() <= 1
+
+
+def test_subsample_tiny_fraction_keeps_all_classes():
+    x, y, k = dataset_by_name("smiley", 45000, seed=0)
+    xs, ys = subsample_balanced(x, y, 0.001, seed=2)  # 45 points
+    assert set(np.unique(ys)) == set(range(k))

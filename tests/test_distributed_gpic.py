@@ -1,0 +1,97 @@
+"""Multi-device distributed GPIC tests.
+
+These run in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
+so the main pytest process keeps its single-device view (per the dry-run rules).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+
+
+def _run_in_subprocess(body: str) -> str:
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.data import gaussians, three_circles
+        from repro.core import pic_reference, adjusted_rand_index
+        from repro.data.synthetic import gaussians as gaussians_k
+        from repro.core.distributed import (
+            distributed_gpic, distributed_gpic_matrix_free, shard_points)
+        mesh = jax.make_mesh((8,), ("data",))
+        """
+    ) + textwrap.dedent(body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=600,
+    )
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_distributed_explicit_matches_reference():
+    out = _run_in_subprocess(
+        """
+        x, y = gaussians(640, seed=0)
+        xs = shard_points(x, mesh, "data")
+        res = distributed_gpic(xs, 4, key=jax.random.key(1), mesh=mesh,
+                               affinity_kind="rbf", sigma=0.3, max_iter=300)
+        ref = pic_reference(jnp.asarray(x), 4, key=jax.random.key(1),
+                            affinity_kind="rbf", sigma=0.3, max_iter=300)
+        err = float(jnp.max(jnp.abs(ref.embedding - res.embedding)))
+        ari = adjusted_rand_index(y, np.asarray(res.labels))
+        assert err < 1e-6, err
+        assert ari > 0.95, ari
+        assert int(res.n_iter) == int(ref.n_iter)
+        print("OK", err, ari)
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_distributed_matrix_free_quality_and_scale():
+    out = _run_in_subprocess(
+        """
+        x, y = gaussians(8000, k=3, seed=0)
+        xs = shard_points(x, mesh, "data")
+        res = distributed_gpic_matrix_free(
+            xs, 3, key=jax.random.key(1), mesh=mesh,
+            affinity_kind="cosine_shifted", max_iter=50)
+        ari = adjusted_rand_index(y, np.asarray(res.labels))
+        assert np.isfinite(np.asarray(res.embedding)).all()
+        assert ari > 0.9, ari
+        print("OK", ari)
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_distributed_multi_axis_mesh():
+    """Rows sharded over BOTH axes of a 2-D mesh (multi-pod structure)."""
+    out = _run_in_subprocess(
+        """
+        mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
+        x, y = three_circles(480, seed=0)
+        xs = shard_points(x, mesh2, ("pod", "data"))
+        res = distributed_gpic(xs, 3, key=jax.random.key(1), mesh=mesh2,
+                               shard_axes=("pod", "data"),
+                               affinity_kind="rbf", sigma=0.3, max_iter=300)
+        ref = pic_reference(jnp.asarray(x), 3, key=jax.random.key(1),
+                            affinity_kind="rbf", sigma=0.3, max_iter=300)
+        err = float(jnp.max(jnp.abs(ref.embedding - res.embedding)))
+        assert err < 1e-5, err
+        print("OK", err)
+        """
+    )
+    assert "OK" in out

@@ -1,0 +1,119 @@
+"""Tests for the dry-run infrastructure: mesh construction, rules, and the
+trip-count-aware HLO analyzer. Multi-device parts run in subprocesses so this
+process keeps its 1-device view."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyze
+
+REPO_SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+
+
+class TestHloAnalyzer:
+    def test_single_matmul_matches_xla(self):
+        f = jax.jit(lambda x, w: x @ w)
+        s = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        c = f.lower(s, s).compile()
+        mine = analyze(c.as_text()).flops
+        xla = c.cost_analysis()["flops"]
+        assert mine == pytest.approx(xla, rel=0.01)
+
+    def test_scan_trip_count_scaling(self):
+        def scanned(x, ws):
+            return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
+        x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+        w1 = jax.ShapeDtypeStruct((1, 128, 128), jnp.float32)
+        w7 = jax.ShapeDtypeStruct((7, 128, 128), jnp.float32)
+        c1 = jax.jit(scanned).lower(x, w1).compile()
+        c7 = jax.jit(scanned).lower(x, w7).compile()
+        f1 = analyze(c1.as_text()).flops
+        f7 = analyze(c7.as_text()).flops
+        assert f7 == pytest.approx(7 * f1, rel=0.05)
+
+    def test_nested_scan_multiplies(self):
+        def nested(x, ws):
+            def outer(c, w3):
+                return jax.lax.scan(lambda cc, w: (cc @ w, None), c, w3)[0], None
+            return jax.lax.scan(outer, x, ws)[0]
+        x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        ws = jax.ShapeDtypeStruct((3, 5, 64, 64), jnp.float32)
+        c = jax.jit(nested).lower(x, ws).compile()
+        a = analyze(c.as_text())
+        assert a.flops == pytest.approx(15 * 2 * 64**3, rel=0.05)
+
+    def test_sliced_param_not_overcharged(self):
+        """dynamic-slice of a stacked array must charge slice bytes, not the
+        full stack (the 88-layer-scan fix)."""
+        def f(stack):
+            def body(c, i):
+                sl = jax.lax.dynamic_slice(stack, (i, 0, 0), (1, 256, 256))
+                return c + sl[0], None
+            return jax.lax.scan(body, jnp.zeros((256, 256)),
+                                jnp.arange(64))[0]
+        s = jax.ShapeDtypeStruct((64, 256, 256), jnp.float32)
+        c = jax.jit(f).lower(s).compile()
+        a = analyze(c.as_text())
+        full_stack_every_iter = 64 * 64 * 256 * 256 * 4
+        assert a.bytes < full_stack_every_iter / 4, (
+            f"bytes {a.bytes:.2e} suggests full-stack charging")
+
+
+class TestProductionMesh:
+    def test_mesh_requires_512_devices(self):
+        from repro.launch.mesh import make_production_mesh
+        with pytest.raises(RuntimeError, match="512"):
+            make_production_mesh(multi_pod=True)
+
+    def test_mesh_shapes_in_subprocess(self):
+        code = textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+            from repro.launch.mesh import make_production_mesh
+            m1 = make_production_mesh()
+            m2 = make_production_mesh(multi_pod=True)
+            assert dict(m1.shape) == {"data": 16, "model": 16}, m1.shape
+            assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}
+            print("OK")
+        """)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = REPO_SRC
+        out = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, env=env,
+                             timeout=300)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "OK" in out.stdout
+
+
+class TestRules:
+    def test_kv_heads_act_follows_divisibility(self):
+        from repro.configs import get_config
+        from repro.launch.mesh import build_rules
+        rules_granite = build_rules(get_config("granite-34b"))   # kv=1
+        assert rules_granite["kv_heads_act"] is None
+        rules_stable = build_rules(get_config("stablelm-3b"))    # kv=32
+        assert rules_stable["kv_heads_act"] == "model"
+
+    def test_batch_one_idles_data_axis(self):
+        from repro.configs import SHAPE_CELLS, get_config
+        from repro.launch.mesh import build_rules
+        long = next(c for c in SHAPE_CELLS if c.name == "long_500k")
+        rules = build_rules(get_config("mamba2-780m"), long)
+        assert rules["batch"] is None
+
+    @pytest.mark.slow
+    def test_one_dryrun_cell_end_to_end(self, tmp_path):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = REPO_SRC
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "stablelm-3b", "--shape", "decode_32k",
+             "--mesh", "single", "--out", str(tmp_path)],
+            capture_output=True, text=True, env=env, timeout=580)
+        assert out.returncode == 0, out.stderr[-3000:]
+        assert "all requested cells compiled" in out.stdout

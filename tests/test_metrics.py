@@ -1,0 +1,84 @@
+"""Property-based + unit tests for cluster validation metrics (Experiment II)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import adjusted_rand_index, jaccard_index, purity, rand_index
+
+
+def _random_labels(draw, n, k):
+    return draw(st.lists(st.integers(0, k - 1), min_size=n, max_size=n))
+
+
+class TestExactValues:
+    def test_identical_partitions(self):
+        y = [0, 0, 1, 1, 2, 2]
+        assert adjusted_rand_index(y, y) == pytest.approx(1.0)
+        assert jaccard_index(y, y) == pytest.approx(1.0)
+        assert rand_index(y, y) == pytest.approx(1.0)
+        assert purity(y, y) == pytest.approx(1.0)
+
+    def test_label_permutation_invariant(self):
+        y = [0, 0, 1, 1, 2, 2]
+        z = [2, 2, 0, 0, 1, 1]  # same partition, renamed
+        assert adjusted_rand_index(y, z) == pytest.approx(1.0)
+        assert jaccard_index(y, z) == pytest.approx(1.0)
+
+    def test_known_ari_value(self):
+        # sklearn-documented example: ARI([0,0,1,1],[0,0,1,2]) = 0.5714...
+        ari = adjusted_rand_index([0, 0, 1, 1], [0, 0, 1, 2])
+        assert ari == pytest.approx(0.5714285714, abs=1e-9)
+
+    def test_single_cluster_vs_all_distinct(self):
+        y = [0] * 10
+        z = list(range(10))
+        assert jaccard_index(y, z) == pytest.approx(0.0)
+
+
+class TestMetricProperties:
+    @settings(max_examples=200, deadline=None)
+    @given(st.data())
+    def test_ari_symmetric(self, data):
+        n = data.draw(st.integers(2, 40))
+        a = data.draw(st.lists(st.integers(0, 4), min_size=n, max_size=n))
+        b = data.draw(st.lists(st.integers(0, 4), min_size=n, max_size=n))
+        assert adjusted_rand_index(a, b) == pytest.approx(
+            adjusted_rand_index(b, a), abs=1e-12
+        )
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.data())
+    def test_jaccard_bounds(self, data):
+        n = data.draw(st.integers(2, 40))
+        a = data.draw(st.lists(st.integers(0, 4), min_size=n, max_size=n))
+        b = data.draw(st.lists(st.integers(0, 4), min_size=n, max_size=n))
+        j = jaccard_index(a, b)
+        assert 0.0 <= j <= 1.0
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.data())
+    def test_ari_upper_bound(self, data):
+        n = data.draw(st.integers(2, 40))
+        a = data.draw(st.lists(st.integers(0, 4), min_size=n, max_size=n))
+        b = data.draw(st.lists(st.integers(0, 4), min_size=n, max_size=n))
+        assert adjusted_rand_index(a, b) <= 1.0 + 1e-12
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.data())
+    def test_purity_bounds(self, data):
+        n = data.draw(st.integers(2, 40))
+        a = data.draw(st.lists(st.integers(0, 4), min_size=n, max_size=n))
+        b = data.draw(st.lists(st.integers(0, 4), min_size=n, max_size=n))
+        assert 0.0 < purity(a, b) <= 1.0 + 1e-12
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.data())
+    def test_pair_counts_consistency(self, data):
+        from repro.core.metrics import pair_confusion
+
+        n = data.draw(st.integers(2, 30))
+        a = data.draw(st.lists(st.integers(0, 3), min_size=n, max_size=n))
+        b = data.draw(st.lists(st.integers(0, 3), min_size=n, max_size=n))
+        pa, pb, pc, pd = pair_confusion(a, b)
+        assert pa + pb + pc + pd == pytest.approx(n * (n - 1) / 2)

@@ -1,0 +1,108 @@
+"""Hypothesis property tests on the PIC/GPIC system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    affinity_matrix,
+    gpic,
+    gpic_matrix_free,
+    pic_from_affinity,
+    row_normalize_features,
+)
+from repro.core.affinity import degree_matrix_free, matvec_matrix_free
+from repro.core.kmeans import kmeans
+
+
+def _points(n, m, seed):
+    return jax.random.normal(jax.random.key(seed), (n, m)) * 2.0
+
+
+class TestAlgebraicInvariants:
+    @settings(max_examples=30, deadline=None)
+    @given(n=st.integers(8, 120), m=st.integers(1, 8), seed=st.integers(0, 99))
+    def test_w_is_row_stochastic(self, n, m, seed):
+        """W = D^-1 A must have unit row sums (the paper's normalization)."""
+        x = _points(n, m, seed)
+        a = affinity_matrix(x, "cosine_shifted")
+        d = jnp.sum(a, axis=1)
+        w = a / jnp.maximum(d, 1e-30)[:, None]
+        np.testing.assert_allclose(np.asarray(jnp.sum(w, axis=1)), 1.0,
+                                   atol=1e-4)
+
+    @settings(max_examples=30, deadline=None)
+    @given(n=st.integers(8, 120), seed=st.integers(0, 99))
+    def test_embedding_l1_is_one(self, n, seed):
+        """Every power iterate is L1-normalized (Algorithm 2 line 10)."""
+        x = _points(n, 2, seed)
+        res = gpic(x, 2, key=jax.random.key(0), affinity_kind="cosine_shifted",
+                   max_iter=7, use_pallas=False)
+        assert abs(float(jnp.sum(jnp.abs(res.embedding))) - 1.0) < 1e-4
+
+    @settings(max_examples=30, deadline=None)
+    @given(n=st.integers(8, 150), m=st.integers(1, 8), seed=st.integers(0, 99))
+    def test_matrix_free_equals_explicit_matvec(self, n, m, seed):
+        """O2's factored A·v must equal the dense product for random v."""
+        x = _points(n, m, seed)
+        xn = row_normalize_features(x)
+        a = affinity_matrix(x, "cosine_shifted")
+        v = jax.random.uniform(jax.random.key(seed + 1), (n,))
+        np.testing.assert_allclose(
+            np.asarray(a @ v),
+            np.asarray(matvec_matrix_free(xn, v, "cosine_shifted")),
+            atol=5e-4, rtol=1e-3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(16, 100), seed=st.integers(0, 50))
+    def test_labels_in_range_and_all_assigned(self, n, seed):
+        x = _points(n, 2, seed)
+        k = 3
+        res = gpic_matrix_free(x, k, key=jax.random.key(1), max_iter=10)
+        labels = np.asarray(res.labels)
+        assert labels.shape == (n,)
+        assert labels.min() >= 0 and labels.max() < k
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(10, 80), k=st.integers(2, 5), seed=st.integers(0, 50))
+    def test_kmeans_centroids_finite_and_labels_valid(self, n, k, seed):
+        x = _points(n, 3, seed)
+        labels, cents = kmeans(jax.random.key(seed), x, k, iters=10)
+        assert np.isfinite(np.asarray(cents)).all()
+        assert int(labels.max()) < k
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(8, 100), seed=st.integers(0, 50))
+    def test_degree_positive(self, n, seed):
+        """Shifted-cosine degrees are strictly positive (W well-defined)."""
+        x = _points(n, 2, seed)
+        xn = row_normalize_features(x)
+        d = degree_matrix_free(xn, "cosine_shifted")
+        assert float(jnp.min(d)) > 0.0
+
+
+class TestScaleInvariance:
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(16, 80), seed=st.integers(0, 30),
+           scale=st.floats(0.1, 10.0))
+    def test_cosine_affinity_scale_invariant(self, n, seed, scale):
+        """Cosine affinity ignores point magnitudes -> identical clustering."""
+        x = _points(n, 2, seed)
+        a1 = affinity_matrix(x, "cosine_shifted")
+        a2 = affinity_matrix(x * scale, "cosine_shifted")
+        np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(16, 64), seed=st.integers(0, 30))
+    def test_permutation_equivariance_of_embedding(self, n, seed):
+        """Permuting inputs permutes the PIC embedding identically."""
+        x = _points(n, 2, seed)
+        perm = np.random.default_rng(seed).permutation(n)
+        a1 = affinity_matrix(x, "cosine_shifted")
+        a2 = affinity_matrix(x[perm], "cosine_shifted")
+        r1 = pic_from_affinity(a1, 2, key=jax.random.key(0), max_iter=6)
+        r2 = pic_from_affinity(a2, 2, key=jax.random.key(0), max_iter=6)
+        np.testing.assert_allclose(np.asarray(r1.embedding)[perm],
+                                   np.asarray(r2.embedding), atol=1e-5)
