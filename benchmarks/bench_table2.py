@@ -42,12 +42,26 @@ def run(sizes=(1000, 2000, 4000), max_iter=3):
                 lambda: gpic_matrix_free(xj, k, key=key,
                                          affinity_kind="cosine_shifted",
                                          max_iter=max_iter))
+            # engine rows: streaming (A-free) and multi-vector batched state
+            # (same jnp reference ops as the gpic row — apples to apples)
+            t_stream, _ = time_fn(
+                lambda: gpic(xj, k, key=key, affinity_kind="cosine_shifted",
+                             max_iter=max_iter, use_pallas=False,
+                             engine="streaming"))
+            t_mv4, _ = time_fn(
+                lambda: gpic(xj, k, key=key, affinity_kind="cosine_shifted",
+                             max_iter=max_iter, use_pallas=False,
+                             n_vectors=4))
 
             rows.append(csv_row(f"table2/{name}/n={n}/serial", t_serial, ""))
             rows.append(csv_row(f"table2/{name}/n={n}/gpic", t_gpic,
                                 f"speedup={t_serial / t_gpic:.1f}x"))
             rows.append(csv_row(f"table2/{name}/n={n}/gpic_mf", t_mf,
                                 f"speedup={t_serial / t_mf:.1f}x"))
+            rows.append(csv_row(f"table2/{name}/n={n}/gpic_stream", t_stream,
+                                f"speedup={t_serial / t_stream:.1f}x"))
+            rows.append(csv_row(f"table2/{name}/n={n}/gpic_r4", t_mv4,
+                                f"speedup={t_serial / t_mv4:.1f}x"))
     return rows
 
 

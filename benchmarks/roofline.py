@@ -1,11 +1,48 @@
 """Roofline report: aggregates experiments/dryrun/*.json into the §Roofline
 table (per arch × shape × mesh: three terms, dominant bottleneck, MODEL_FLOPS
-ratio)."""
+ratio). Also hosts the power-engine SWEEP-COUNT model (DESIGN.md §7): the
+closed-form HBM-traffic-per-iteration accounting that bench_multivec.py and
+``benchmarks.run --json`` report against."""
 from __future__ import annotations
 
 import glob
 import json
 import os
+
+
+def sweep_model(n: int, r: int, mode: str, *, m: int = 2, a_bytes: int = 4,
+                tm: int = 256, tn: int = 256) -> dict:
+    """HBM traffic per power iteration for ``r`` vectors on n points.
+
+    Modes (DESIGN.md §7):
+      seed_pervec       r independent matvec loops: r full sweeps of A.
+      engine_explicit   batched (n, r) mat-mat: ONE sweep of A, amortized
+                        over all r vectors (A may be bf16: a_bytes=2).
+      engine_streaming  A never stored: per (i, j) tile step the kernel
+                        re-reads a (tm, m) + (tn, m) feature slab — slab
+                        traffic is independent of a_bytes and r, with NO
+                        O(n^2) residency.
+
+    All tiled modes also re-fetch the (tn, r) V slice per grid step (each
+    of the n/tm output row-blocks scans the full V) and write U once:
+    4·n·r·(n/tm + 1) bytes — identical across modes, so the A-traffic term
+    is what separates them.
+    """
+    vec_bytes = 4 * n * r * (n // tm) + 4 * n * r  # V re-reads + U write, f32
+    if mode == "seed_pervec":
+        a_traffic, sweeps = r * n * n * a_bytes, r
+    elif mode == "engine_explicit":
+        a_traffic, sweeps = n * n * a_bytes, 1
+    elif mode == "engine_streaming":
+        a_traffic = 4 * n * m * (n // tn + n // tm)    # f32 slabs, re-read per tile row/col
+        sweeps = 0
+    else:
+        raise ValueError(f"unknown sweep mode {mode!r}")
+    return {
+        "mode": mode, "n": n, "r": r, "a_sweeps": sweeps,
+        "bytes_per_iter": a_traffic + vec_bytes,
+        "a_bytes_resident": 0 if mode == "engine_streaming" else n * n * a_bytes,
+    }
 
 
 def load(dryrun_dir="experiments/dryrun"):

@@ -4,11 +4,28 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run            # quick set
     PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sizes
+    PYTHONPATH=src python -m benchmarks.run --json     # + BENCH_PR1.json
+
+``--json [PATH]`` additionally writes a machine-readable perf snapshot
+(us/call per job row plus the engine sweep-count model) for CI diffing.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+
+
+def _rows_to_records(rows):
+    recs = []
+    for row in rows:
+        name, us, *derived = row.split(",", 2)
+        recs.append({
+            "name": name,
+            "us_per_call": float(us),
+            "derived": derived[0] if derived else "",
+        })
+    return recs
 
 
 def main() -> None:
@@ -17,10 +34,14 @@ def main() -> None:
                     help="paper-scale sizes (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,table2,fig3,exp2,"
-                         "roofline")
+                         "roofline,multivec")
+    ap.add_argument("--json", nargs="?", const="BENCH_PR1.json", default=None,
+                    metavar="PATH",
+                    help="write a JSON perf snapshot (default BENCH_PR1.json)")
     args = ap.parse_args()
 
-    from . import bench_exp2, bench_fig3, bench_table1, bench_table2, roofline
+    from . import (bench_exp2, bench_fig3, bench_multivec, bench_table1,
+                   bench_table2, roofline)
 
     jobs = {
         "table1": lambda: bench_table1.run(
@@ -34,17 +55,32 @@ def main() -> None:
             fractions=((0.002, 0.005, 0.01, 0.02, 0.05, 0.1) if args.full
                        else (0.01, 0.05, 0.2))),
         "roofline": roofline.run,
+        "multivec": lambda: bench_multivec.run(
+            n=2048 if args.full else 1024),
     }
     selected = (args.only.split(",") if args.only else list(jobs))
 
+    snapshot = {"jobs": {}, "sweep_model": []}
     print("name,us_per_call,derived")
     for name in selected:
         try:
-            for row in jobs[name]():
+            rows = jobs[name]()
+            for row in rows:
                 print(row, flush=True)
+            if args.json:
+                snapshot["jobs"][name] = _rows_to_records(rows)
         except Exception as e:  # keep the harness running
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}", file=sys.stderr)
             raise
+
+    if args.json:
+        n = 2048 if args.full else 1024
+        for mode in ("seed_pervec", "engine_explicit", "engine_streaming"):
+            for r in (1, 4):
+                snapshot["sweep_model"].append(roofline.sweep_model(n, r, mode))
+        with open(args.json, "w") as f:
+            json.dump(snapshot, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

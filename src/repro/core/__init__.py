@@ -3,11 +3,17 @@ from .affinity import (
     affinity_chunked,
     affinity_matrix,
     degree_matrix_free,
+    matmat_matrix_free,
     matvec_matrix_free,
     rbf_bandwidth_heuristic,
     row_normalize_features,
 )
 from .gpic import gpic, gpic_matrix_free
+from .power import (
+    batched_power_iteration,
+    init_power_vectors,
+    standardize_columns,
+)
 from .kmeans import kmeans, kmeans_objective, kmeans_plus_plus_init
 from .metrics import adjusted_rand_index, jaccard_index, purity, rand_index
 from .pic import PICResult, pic_from_affinity, pic_reference, pic_serial_numpy
@@ -15,8 +21,12 @@ from .pic import PICResult, pic_from_affinity, pic_reference, pic_serial_numpy
 __all__ = [
     "affinity_matrix",
     "affinity_chunked",
+    "batched_power_iteration",
+    "init_power_vectors",
+    "matmat_matrix_free",
     "matvec_matrix_free",
     "degree_matrix_free",
+    "standardize_columns",
     "row_normalize_features",
     "rbf_bandwidth_heuristic",
     "kmeans",

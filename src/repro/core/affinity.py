@@ -112,21 +112,32 @@ def affinity_chunked(
     return jnp.concatenate(out, axis=0)
 
 
-def matvec_matrix_free(
+def matmat_matrix_free(
     xn: jax.Array, v: jax.Array, kind: AffinityKind = "cosine_shifted"
 ) -> jax.Array:
-    """A @ v without materializing A (DESIGN.md §2, optimization O2).
+    """A @ V without materializing A (DESIGN.md §2, optimization O2).
 
-    For cosine:           A v = X̂ (X̂ᵀ v) − v          (diag of X̂X̂ᵀ is 1)
-    For cosine_shifted:   A v = (Σv · 1 + X̂(X̂ᵀv))/2 − v  (diag is 1 → −1·v)
-    Cost O(n·m) instead of O(n²); exact (same float ops up to association).
-    ``xn`` must already be row-normalized.
+    ``v`` may be a single vector (n,) or a batch of power vectors (n, r) —
+    the factored product applies per column, so all r vectors share the two
+    O(n·m·r) skinny matmuls (the engine's one-sweep property, DESIGN.md §4).
+
+    For cosine:           A V = X̂ (X̂ᵀ V) − V          (diag of X̂X̂ᵀ is 1)
+    For cosine_shifted:   A V = (ΣV · 1 + X̂(X̂ᵀV))/2 − V  (diag is 1 → −1·V)
+    Cost O(n·m·r) instead of O(n²·r); exact (same float ops up to
+    association). ``xn`` must already be row-normalized.
     """
     if kind == "cosine":
         return xn @ (xn.T @ v) - v
     if kind == "cosine_shifted":
-        return 0.5 * (jnp.sum(v) + xn @ (xn.T @ v)) - v
+        return 0.5 * (jnp.sum(v, axis=0) + xn @ (xn.T @ v)) - v
     raise ValueError(f"matrix-free path supports cosine affinities, got {kind!r}")
+
+
+def matvec_matrix_free(
+    xn: jax.Array, v: jax.Array, kind: AffinityKind = "cosine_shifted"
+) -> jax.Array:
+    """Single-vector alias of ``matmat_matrix_free`` (kept for callers)."""
+    return matmat_matrix_free(xn, v, kind)
 
 
 def degree_matrix_free(

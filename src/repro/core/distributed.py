@@ -2,18 +2,20 @@
 for the production mesh (DESIGN.md §3).
 
 Layouts:
-  explicit path:     A row-stripes sharded over the given mesh axes; X and v
-                     replicated via all-gather (X once, v per step — O(n)
+  explicit path:     A row-stripes sharded over the given mesh axes; X and V
+                     replicated via all-gather (X once, V per step — O(n r)
                      bytes/step vs O(n²/P) compute: collective-light).
-  matrix-free path:  X̂ row-sharded; per step one psum of an (m,)-vector and
-                     two scalar psums. Collectives O(m) per step — this is the
-                     configuration that scales to thousands of nodes.
+  matrix-free path:  X̂ row-sharded; per step one psum of an (m, r) block and
+                     two (r,) psums. Collectives O(m r) per step — this is
+                     the configuration that scales to thousands of nodes.
 
-The final k-means runs on the (already replicated) 1-D embedding identically
-on every device — deterministic, no collective needed.
+Both paths run the batched multi-vector engine state (core/power.py
+semantics): ``n_vectors`` power vectors iterate as one (n, r) matrix, one
+stripe sweep per iteration regardless of r, with per-column freezing so
+every column reproduces its dedicated single-vector trajectory.
 
-Both paths expose a segment runner (``*_segment``) returning the iteration
-state, used by the fault-tolerance layer to checkpoint/restart mid-iteration.
+The final k-means runs on the (already replicated) (n, r) embedding
+identically on every device — deterministic, no collective needed.
 """
 from __future__ import annotations
 
@@ -27,40 +29,52 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .affinity import AffinityKind, row_normalize_features
 from .kmeans import kmeans
-from .pic import PICResult, standardize_embedding
+from .pic import PICResult
+from .power import random_start_vectors, standardize_columns
 
 
 def _axis_tuple(axes) -> tuple[str, ...]:
     return (axes,) if isinstance(axes, str) else tuple(axes)
 
 
-def _replicated_power_loop(matvec_local, v0_full, n_loc, axes, eps, max_iter,
+def _replicated_power_loop(matmat_local, v0_full, n_loc, axes, eps, max_iter,
                            idx):
-    """Power loop where each device owns rows [idx*n_loc, (idx+1)*n_loc).
+    """Batched power loop; each device owns rows [idx*n_loc, (idx+1)*n_loc).
 
-    ``matvec_local`` maps a full replicated v to the local (A v / d) chunk.
-    Returns the *replicated* final v plus iteration stats.
+    ``matmat_local`` maps a full replicated (n, r) V to the local
+    (n_loc, r) chunk of (A V / d). Per-column freezing matches
+    core.power.batched_power_iteration exactly, with the L1/∞-norm
+    reductions psum/pmax'd over the mesh axes. Returns the *replicated*
+    final V plus per-column iteration stats.
     """
+    r = v0_full.shape[1]
 
     def cond(state):
-        t, _v, _delta, done = state
-        return jnp.logical_and(t < max_iter, jnp.logical_not(done))
+        t, _v, _delta, done, _t_cols = state
+        return jnp.logical_and(t < max_iter, jnp.logical_not(jnp.all(done)))
 
     def body(state):
-        t, v_full, delta_loc, _done = state
-        u_loc = matvec_local(v_full)
-        l1 = jax.lax.psum(jnp.sum(jnp.abs(u_loc)), axes)
-        v_loc = u_loc / jnp.maximum(l1, 1e-30)
-        v_prev_loc = jax.lax.dynamic_slice(v_full, (idx * n_loc,), (n_loc,))
+        t, v_full, delta_loc, done, t_cols = state
+        u_loc = matmat_local(v_full)                            # (n_loc, r)
+        l1 = jax.lax.psum(jnp.sum(jnp.abs(u_loc), axis=0), axes)    # (r,)
+        v_loc = u_loc / jnp.maximum(l1, 1e-30)[None, :]
+        v_prev_loc = jax.lax.dynamic_slice(
+            v_full, (idx * n_loc, 0), (n_loc, r))
         delta_next = jnp.abs(v_loc - v_prev_loc)
-        accel = jax.lax.pmax(jnp.max(jnp.abs(delta_next - delta_loc)), axes)
+        accel = jax.lax.pmax(
+            jnp.max(jnp.abs(delta_next - delta_loc), axis=0), axes)  # (r,)
+        v_loc = jnp.where(done[None, :], v_prev_loc, v_loc)
+        delta_next = jnp.where(done[None, :], delta_loc, delta_next)
+        t_cols = t_cols + jnp.where(done, 0, 1).astype(jnp.int32)
+        done = jnp.logical_or(done, accel <= eps)
         v_next_full = jax.lax.all_gather(v_loc, axes, axis=0, tiled=True)
-        return t + 1, v_next_full, delta_next, accel <= eps
+        return t + 1, v_next_full, delta_next, done, t_cols
 
-    delta0 = jax.lax.dynamic_slice(v0_full, (idx * n_loc,), (n_loc,))
-    state = (jnp.int32(0), v0_full, delta0, jnp.bool_(False))
-    t, v_full, _d, done = jax.lax.while_loop(cond, body, state)
-    return v_full, t, done
+    delta0 = jax.lax.dynamic_slice(v0_full, (idx * n_loc, 0), (n_loc, r))
+    state = (jnp.int32(0), v0_full, delta0,
+             jnp.zeros((r,), bool), jnp.zeros((r,), jnp.int32))
+    _t, v_full, _d, done, t_cols = jax.lax.while_loop(cond, body, state)
+    return v_full, t_cols, done
 
 
 def _stripe_affinity(x_loc, x_full, row0, kind: str, sigma: float):
@@ -88,7 +102,7 @@ def _stripe_affinity(x_loc, x_full, row0, kind: str, sigma: float):
     jax.jit,
     static_argnames=("k", "mesh", "shard_axes", "max_iter", "kmeans_iters",
                      "affinity_kind", "sigma", "eps_scale", "a_dtype",
-                     "fold_shift"),
+                     "fold_shift", "n_vectors"),
 )
 def distributed_gpic(
     x: jax.Array,
@@ -104,6 +118,7 @@ def distributed_gpic(
     sigma: float = 1.0,
     a_dtype=jnp.float32,
     fold_shift: bool = False,
+    n_vectors: int = 1,
 ) -> PICResult:
     """Explicit-A distributed GPIC (paper-faithful math, row-striped A).
 
@@ -111,16 +126,20 @@ def distributed_gpic(
       a_dtype=bf16 (O4): store the stripe in bf16; per-iteration A reads
         halve; reductions stay f32-accumulated.
       fold_shift (O5, cosine_shifted only): store RAW A' = X̂X̂ᵀ and fold
-        the (1+a)/2 transform + diagonal mask into the matvec algebra
-        ((Av)_i = 0.5(Σv + (A'v)_i) − v_i, using a'_ii = 1) — the O(n²/P)
+        the (1+a)/2 transform + diagonal mask into the mat-mat algebra
+        ((AV)_i = 0.5(ΣV + (A'V)_i) − V_i, using a'_ii = 1) — the O(n²/P)
         transform/mask passes over A disappear from the build.
+      n_vectors=r: the multi-vector engine — r power vectors in one
+        (n, r) state, ONE stripe sweep per iteration (DESIGN.md §4).
     """
     axes = _axis_tuple(shard_axes)
     n = x.shape[0]
     eps = eps_scale / n
     fold = fold_shift and affinity_kind == "cosine_shifted"
+    kkm, krand = jax.random.split(key)
+    u0t = random_start_vectors(krand, n, n_vectors)
 
-    def fn(x_loc, key):
+    def fn(x_loc, key, u0t):
         idx = jax.lax.axis_index(axes)
         n_loc = x_loc.shape[0]
         row0 = idx * n_loc
@@ -146,30 +165,32 @@ def distributed_gpic(
         dsum = jax.lax.psum(jnp.sum(d_loc), axes)
         v0_loc = d_loc / jnp.maximum(dsum, 1e-30)
         v0_full = jax.lax.all_gather(v0_loc, axes, axis=0, tiled=True)
+        v0_full = jnp.concatenate([v0_full[:, None], u0t], axis=1)
 
-        def mv(v_full):
+        def mm(v_full):
             av = jax.lax.dot_general(
                 a_loc, v_full.astype(a_dtype), (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)   # bf16 read, f32 accum
             if fold:
-                sv = jnp.sum(v_full)
-                v_own = jax.lax.dynamic_slice(v_full, (row0,), (n_loc,))
-                av = 0.5 * (sv + av) - v_own
-            return av / jnp.maximum(d_loc, 1e-30)
+                sv = jnp.sum(v_full, axis=0)                    # (r,)
+                v_own = jax.lax.dynamic_slice(
+                    v_full, (row0, 0), (n_loc, v_full.shape[1]))
+                av = 0.5 * (sv[None, :] + av) - v_own
+            return av / jnp.maximum(d_loc, 1e-30)[:, None]
 
-        v_full, t, done = _replicated_power_loop(
-            mv, v0_full, n_loc, axes, eps, max_iter, idx)
-        emb = standardize_embedding(v_full)[:, None]
+        v_full, t_cols, done = _replicated_power_loop(
+            mm, v0_full, n_loc, axes, eps, max_iter, idx)
+        emb = standardize_columns(v_full)
         labels, _ = kmeans(key, emb, k, iters=kmeans_iters)
-        return labels, v_full, t, done
+        return labels, v_full[:, 0], t_cols[0], done[0]
 
     spec_x = P(axes)
     out = shard_map(
         fn, mesh=mesh,
-        in_specs=(spec_x, P()),
+        in_specs=(spec_x, P(), P()),
         out_specs=(P(), P(), P(), P()),
         check_rep=False,
-    )(x, key)
+    )(x, kkm, u0t)
     labels, v, t, done = out
     return PICResult(labels=labels, embedding=v, n_iter=t, converged=done)
 
@@ -177,7 +198,7 @@ def distributed_gpic(
 @functools.partial(
     jax.jit,
     static_argnames=("k", "mesh", "shard_axes", "max_iter", "kmeans_iters",
-                     "affinity_kind", "eps_scale"),
+                     "affinity_kind", "eps_scale", "n_vectors"),
 )
 def distributed_gpic_matrix_free(
     x: jax.Array,
@@ -190,61 +211,75 @@ def distributed_gpic_matrix_free(
     max_iter: int = 50,
     kmeans_iters: int = 25,
     affinity_kind: AffinityKind = "cosine_shifted",
+    n_vectors: int = 1,
 ) -> PICResult:
-    """Matrix-free distributed GPIC (O2): psum(m) per step, scales to 1000s
+    """Matrix-free distributed GPIC (O2): psum(m r) per step, scales to 1000s
     of nodes. Cosine affinity kinds only (they factor; DESIGN.md §2)."""
     axes = _axis_tuple(shard_axes)
     n = x.shape[0]
     eps = eps_scale / n
     if affinity_kind not in ("cosine", "cosine_shifted"):
         raise ValueError("matrix-free path needs a factorable affinity")
+    kkm, krand = jax.random.split(key)
+    u0t = random_start_vectors(krand, n, n_vectors)
 
-    def fn(x_loc, key):
+    def fn(x_loc, key, u0t):
         idx = jax.lax.axis_index(axes)
         n_loc = x_loc.shape[0]
+        r = n_vectors
         xn_loc = row_normalize_features(x_loc)
 
-        def mv_raw(v_loc):
-            # A v  =  f(X̂ (X̂ᵀ v)) − v, with the X̂ᵀv partial psum'd (O(m))
-            s = jax.lax.psum(xn_loc.T @ v_loc, axes)          # (m,)
+        def mm_raw(v_loc):
+            # A V  =  f(X̂ (X̂ᵀ V)) − V, with the X̂ᵀV partial psum'd (O(m r))
+            s = jax.lax.psum(xn_loc.T @ v_loc, axes)          # (m, r)
             av = xn_loc @ s - v_loc
             if affinity_kind == "cosine_shifted":
-                vsum = jax.lax.psum(jnp.sum(v_loc), axes)
-                av = 0.5 * (vsum + xn_loc @ s) - v_loc
+                vsum = jax.lax.psum(jnp.sum(v_loc, axis=0), axes)   # (r,)
+                av = 0.5 * (vsum[None, :] + xn_loc @ s) - v_loc
             return av
 
-        d_loc = mv_raw(jnp.ones((n_loc,), xn_loc.dtype))
+        d_loc = mm_raw(jnp.ones((n_loc, 1), xn_loc.dtype))[:, 0]
         dsum = jax.lax.psum(jnp.sum(d_loc), axes)
-        v_loc = d_loc / jnp.maximum(dsum, 1e-30)
+        v_loc = (d_loc / jnp.maximum(dsum, 1e-30))[:, None]
+        u0t_loc = jax.lax.dynamic_slice(
+            u0t, (idx * n_loc, 0), (n_loc, u0t.shape[1]))
+        v_loc = jnp.concatenate([v_loc, u0t_loc], axis=1)       # (n_loc, r)
         delta_loc = v_loc
 
         def cond(state):
-            t, _v, _delta, done = state
-            return jnp.logical_and(t < max_iter, jnp.logical_not(done))
+            t, _v, _delta, done, _t_cols = state
+            return jnp.logical_and(t < max_iter,
+                                   jnp.logical_not(jnp.all(done)))
 
         def body(state):
-            t, v_loc, delta_loc, _done = state
-            u_loc = mv_raw(v_loc) / jnp.maximum(d_loc, 1e-30)
-            l1 = jax.lax.psum(jnp.sum(jnp.abs(u_loc)), axes)
-            v_next = u_loc / jnp.maximum(l1, 1e-30)
+            t, v_loc, delta_loc, done, t_cols = state
+            u_loc = mm_raw(v_loc) / jnp.maximum(d_loc, 1e-30)[:, None]
+            l1 = jax.lax.psum(jnp.sum(jnp.abs(u_loc), axis=0), axes)  # (r,)
+            v_next = u_loc / jnp.maximum(l1, 1e-30)[None, :]
             delta_next = jnp.abs(v_next - v_loc)
-            accel = jax.lax.pmax(jnp.max(jnp.abs(delta_next - delta_loc)), axes)
-            return t + 1, v_next, delta_next, accel <= eps
+            accel = jax.lax.pmax(
+                jnp.max(jnp.abs(delta_next - delta_loc), axis=0), axes)
+            v_next = jnp.where(done[None, :], v_loc, v_next)
+            delta_next = jnp.where(done[None, :], delta_loc, delta_next)
+            t_cols = t_cols + jnp.where(done, 0, 1).astype(jnp.int32)
+            done = jnp.logical_or(done, accel <= eps)
+            return t + 1, v_next, delta_next, done, t_cols
 
-        state = (jnp.int32(0), v_loc, delta_loc, jnp.bool_(False))
-        t, v_loc, _d, done = jax.lax.while_loop(cond, body, state)
+        state = (jnp.int32(0), v_loc, delta_loc,
+                 jnp.zeros((r,), bool), jnp.zeros((r,), jnp.int32))
+        _t, v_loc, _d, done, t_cols = jax.lax.while_loop(cond, body, state)
 
         v_full = jax.lax.all_gather(v_loc, axes, axis=0, tiled=True)  # once
-        emb = standardize_embedding(v_full)[:, None]
+        emb = standardize_columns(v_full)
         labels, _ = kmeans(key, emb, k, iters=kmeans_iters)
-        return labels, v_full, t, done
+        return labels, v_full[:, 0], t_cols[0], done[0]
 
     out = shard_map(
         fn, mesh=mesh,
-        in_specs=(P(axes), P()),
+        in_specs=(P(axes), P(), P()),
         out_specs=(P(), P(), P(), P()),
         check_rep=False,
-    )(x, key)
+    )(x, kkm, u0t)
     labels, v, t, done = out
     return PICResult(labels=labels, embedding=v, n_iter=t, converged=done)
 

@@ -5,54 +5,52 @@ kernels map onto two fused Pallas kernels plus O(n) epilogues (DESIGN.md §2):
 
     paper kernel 1 AffinityMatrix ┐
     paper kernel 2 RowSum         ┴→ kernels.ops.affinity_and_degree  (fused)
-    paper kernel 3 NormMatrix      → eliminated: W v = D^-1 (A v)      (O1b)
+    paper kernel 3 NormMatrix      → eliminated: W V = D^-1 (A V)      (O1b)
     paper kernel 6 Multiply       ┐
-    paper kernel 4 Reduction      ┴→ kernels.ops.power_step            (fused)
-    paper kernel 5 Norm            → O(n) epilogue inside power_step
+    paper kernel 4 Reduction      ┴→ kernels.ops.degree_normalized_matmat
+    paper kernel 5 Norm            → O(n r) epilogue in the power loop
 
-``gpic`` (explicit A) is the paper-faithful accelerated path; it converges to
-the same result as ``pic_reference`` (the paper's exactness claim).
-``gpic_matrix_free`` is the beyond-paper O2 path: O(n·m) per iteration, no A.
+All paths run the multi-vector power ENGINE (core/power.py): the iteration
+state is one (n, r) matrix and every iteration costs ONE sweep of A
+regardless of ``n_vectors`` (DESIGN.md §4). Engines:
+
+  engine='explicit'   paper-faithful: build A once (optionally bf16-stored,
+                      f32-accumulated — O4), then fused mat-mat sweeps.
+  engine='streaming'  A-free: affinity tiles are regenerated from the
+                      feature slabs inside every power step (DESIGN.md §5).
+                      Works for ALL affinity kinds including rbf; peak
+                      memory O(n m + n r), no (n, n) allocation ever.
+
+``gpic`` (explicit A) converges to the same result as ``pic_reference``
+(the paper's exactness claim). ``gpic_matrix_free`` is the beyond-paper O2
+jnp path: O(n·m) per iteration, cosine kinds only.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
-from .affinity import AffinityKind, matvec_matrix_free, row_normalize_features
+from .affinity import AffinityKind, matmat_matrix_free, row_normalize_features
 from .kmeans import kmeans
-from .pic import PICResult, standardize_embedding
+from .pic import PICResult
+from .power import (
+    batched_power_iteration,
+    init_power_vectors,
+    standardize_columns,
+)
 
-
-def _truncated_power_iteration(matvec_over_degree, v0, eps, max_iter):
-    """Shared stopping logic (paper Algorithm 2 lines 6-15)."""
-
-    def cond(state):
-        t, _v, _delta, done = state
-        return jnp.logical_and(t < max_iter, jnp.logical_not(done))
-
-    def body(state):
-        t, v, delta, _done = state
-        u = matvec_over_degree(v)                       # (A v)/d fused kernel
-        v_next = u / jnp.maximum(jnp.sum(jnp.abs(u)), 1e-30)
-        delta_next = jnp.abs(v_next - v)
-        accel = jnp.max(jnp.abs(delta_next - delta))
-        return t + 1, v_next, delta_next, accel <= eps
-
-    state = (jnp.int32(0), v0, v0, jnp.bool_(False))
-    t, v, _d, done = jax.lax.while_loop(cond, body, state)
-    return v, t, done
+#: kept under its historical name for callers that batch a custom matvec
+_truncated_power_iteration = batched_power_iteration
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
         "k", "max_iter", "kmeans_iters", "affinity_kind", "sigma",
-        "n_vectors", "use_pallas", "tile",
+        "n_vectors", "use_pallas", "tile", "engine", "a_dtype",
     ),
 )
 def gpic(
@@ -67,40 +65,56 @@ def gpic(
     sigma: float = 1.0,
     n_vectors: int = 1,
     use_pallas: bool = True,
-    tile: int = 256,
+    tile: int | None = None,
+    engine: str = "explicit",
+    a_dtype=jnp.float32,
 ) -> PICResult:
-    """Accelerated PIC with explicit A (the paper-faithful GPIC pipeline)."""
+    """Accelerated PIC via the multi-vector power engine.
+
+    ``tile=None`` lets the static autotuner pick the Pallas tile size;
+    ``use_pallas=False`` routes every op to the pure-jnp reference
+    implementations (same math, unfused HLO).
+    """
     n = x.shape[0]
     if eps is None:
         eps = 1e-5 / n
 
     inp = x if affinity_kind == "rbf" else row_normalize_features(x)
-    a, d = ops.affinity_and_degree(
-        inp, kind=affinity_kind, sigma=sigma, tm=tile, tn=tile,
-        force_reference=not use_pallas,
-    )
-    v0 = d / jnp.maximum(jnp.sum(d), 1e-30)
 
-    def mv(v):
-        return ops.degree_normalized_matvec(
-            a, v, d, tm=tile, tn=tile, force_reference=not use_pallas
+    if engine == "explicit":
+        a, d = ops.affinity_and_degree(
+            inp, kind=affinity_kind, sigma=sigma, tm=tile, tn=tile,
+            out_dtype=a_dtype, force_reference=not use_pallas,
         )
 
-    kkm, krand = jax.random.split(key)
-    v, n_iter, converged = _truncated_power_iteration(mv, v0, eps, max_iter)
-    if n_vectors > 1:
-        u0 = jax.random.uniform(krand, (n_vectors - 1, n), v0.dtype)
-        u0 = u0 / jnp.sum(u0, axis=1, keepdims=True)
-        extra, _, _ = jax.vmap(
-            lambda vv: _truncated_power_iteration(mv, vv, eps, max_iter)
-        )(u0)
-        emb = jnp.concatenate(
-            [standardize_embedding(v)[:, None],
-             jax.vmap(standardize_embedding)(extra).T], axis=1)
+        def mm(v):
+            return ops.degree_normalized_matmat(
+                a, v, d, tm=tile, tn=tile, force_reference=not use_pallas
+            )
+
+    elif engine == "streaming":
+        d = ops.streaming_degree(
+            inp, kind=affinity_kind, sigma=sigma, tm=tile, tn=tile,
+            force_reference=not use_pallas,
+        )
+
+        def mm(v):
+            return ops.streaming_matmat(
+                inp, v, d, kind=affinity_kind, sigma=sigma, tm=tile, tn=tile,
+                force_reference=not use_pallas,
+            )
+
     else:
-        emb = standardize_embedding(v)[:, None]
+        raise ValueError(f"unknown engine {engine!r} "
+                         "(expected 'explicit' or 'streaming')")
+
+    kkm, krand = jax.random.split(key)
+    v0 = init_power_vectors(krand, d, n_vectors)
+    v, t_cols, done = batched_power_iteration(mm, v0, eps, max_iter)
+    emb = standardize_columns(v)
     labels, _ = kmeans(kkm, emb, k, iters=kmeans_iters)
-    return PICResult(labels=labels, embedding=v, n_iter=n_iter, converged=converged)
+    return PICResult(labels=labels, embedding=v[:, 0], n_iter=t_cols[0],
+                     converged=done[0])
 
 
 @functools.partial(
@@ -120,31 +134,24 @@ def gpic_matrix_free(
 ) -> PICResult:
     """Beyond-paper O2: PIC without materializing A (cosine kinds only).
 
-    Per-iteration cost O(n·m) and memory O(n·m) — the paper's 36.5 GB
-    (n = 45k) A matrix is never built. Exact same math as the explicit path.
+    Per-iteration cost O(n·m·r) and memory O(n·m) — the paper's 36.5 GB
+    (n = 45k) A matrix is never built. Exact same math as the explicit path,
+    run on the same batched engine state.
     """
     n = x.shape[0]
     if eps is None:
         eps = 1e-5 / n
     xn = row_normalize_features(x)
-    d = matvec_matrix_free(xn, jnp.ones((n,), xn.dtype), affinity_kind)
-    v0 = d / jnp.maximum(jnp.sum(d), 1e-30)
+    d = matmat_matrix_free(xn, jnp.ones((n,), xn.dtype), affinity_kind)
 
-    def mv(v):
-        return matvec_matrix_free(xn, v, affinity_kind) / jnp.maximum(d, 1e-30)
+    def mm(v):
+        return matmat_matrix_free(xn, v, affinity_kind) / jnp.maximum(
+            d, 1e-30)[:, None]
 
     kkm, krand = jax.random.split(key)
-    v, n_iter, converged = _truncated_power_iteration(mv, v0, eps, max_iter)
-    if n_vectors > 1:
-        u0 = jax.random.uniform(krand, (n_vectors - 1, n), v0.dtype)
-        u0 = u0 / jnp.sum(u0, axis=1, keepdims=True)
-        extra, _, _ = jax.vmap(
-            lambda vv: _truncated_power_iteration(mv, vv, eps, max_iter)
-        )(u0)
-        emb = jnp.concatenate(
-            [standardize_embedding(v)[:, None],
-             jax.vmap(standardize_embedding)(extra).T], axis=1)
-    else:
-        emb = standardize_embedding(v)[:, None]
+    v0 = init_power_vectors(krand, d, n_vectors)
+    v, t_cols, done = batched_power_iteration(mm, v0, eps, max_iter)
+    emb = standardize_columns(v)
     labels, _ = kmeans(kkm, emb, k, iters=kmeans_iters)
-    return PICResult(labels=labels, embedding=v, n_iter=n_iter, converged=converged)
+    return PICResult(labels=labels, embedding=v[:, 0], n_iter=t_cols[0],
+                     converged=done[0])

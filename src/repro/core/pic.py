@@ -22,6 +22,11 @@ import numpy as np
 
 from .affinity import AffinityKind, affinity_matrix
 from .kmeans import kmeans
+from .power import (
+    batched_power_iteration,
+    init_power_vectors,
+    standardize_columns,
+)
 
 
 @jax.tree_util.register_dataclass
@@ -39,29 +44,16 @@ def _power_iterate(
     eps: float,
     max_iter: int,
 ):
-    """Truncated power iteration with the paper's stopping rule.
+    """Single-vector truncated power iteration with the paper's stopping rule.
 
     Stop when || delta_{t+1} - delta_t ||_inf <= eps  where
-    delta_{t+1} = |v_{t+1} - v_t|  (Algorithm 1 lines 4-7).
+    delta_{t+1} = |v_{t+1} - v_t|  (Algorithm 1 lines 4-7). The r=1 slice of
+    the batched engine loop (core/power.py), kept for single-vector callers.
     """
-    n = v0.shape[0]
-
-    def cond(state):
-        t, _v, _delta, done = state
-        return jnp.logical_and(t < max_iter, jnp.logical_not(done))
-
-    def body(state):
-        t, v, delta, _done = state
-        wv = w_matvec(v)
-        v_next = wv / jnp.maximum(jnp.sum(jnp.abs(wv)), 1e-30)
-        delta_next = jnp.abs(v_next - v)
-        accel = jnp.max(jnp.abs(delta_next - delta))
-        return t + 1, v_next, delta_next, accel <= eps
-
-    # delta_0 <- v_0 (Algorithm 1 line 1)
-    state = (jnp.int32(0), v0, v0, jnp.bool_(False))
-    t, v, _delta, done = jax.lax.while_loop(cond, body, state)
-    return v, t, done
+    v, t_cols, done = batched_power_iteration(
+        lambda vv: w_matvec(vv[:, 0])[:, None], v0[:, None], eps, max_iter
+    )
+    return v[:, 0], t_cols[0], done[0]
 
 
 def standardize_embedding(v: jax.Array) -> jax.Array:
@@ -114,34 +106,26 @@ def pic_from_affinity(
 
     W = D^-1 A is materialized explicitly, exactly as Algorithm 1/2 do.
     v_0 = D / sum(D) (GPIC Algorithm 2 lines 4-5). ``eps`` defaults to the
-    paper's 1e-5 / n. ``n_vectors > 1`` runs extra power iterations from
-    random starts and clusters the stacked embedding (Lin & Cohen's
-    multi-vector extension; beyond-paper robustness option O3).
+    paper's 1e-5 / n. ``n_vectors > 1`` adds extra power vectors from random
+    starts and clusters the stacked embedding (Lin & Cohen's multi-vector
+    extension; beyond-paper robustness option O3). All vectors iterate as
+    ONE (n, r) batched state — a single W mat-mat per iteration instead of
+    r separate sweeps (core/power.py).
     """
     n = a.shape[0]
     if eps is None:
         eps = 1e-5 / n
     d = jnp.sum(a, axis=1)
     w = a / jnp.maximum(d, 1e-30)[:, None]
-    v0 = d / jnp.maximum(jnp.sum(d), 1e-30)
 
     kkm, krand = jax.random.split(key)
-    v, n_iter, converged = _power_iterate(lambda v: w @ v, v0, eps, max_iter)
-    if n_vectors > 1:
-        u = jax.random.uniform(krand, (n_vectors - 1, n), a.dtype)
-        u = u / jnp.sum(u, axis=1, keepdims=True)
-        extra, _, _ = jax.vmap(
-            lambda vv: _power_iterate(lambda q: w @ q, vv, eps, max_iter)
-        )(u)
-        emb = jnp.concatenate(
-            [standardize_embedding(v)[:, None],
-             jax.vmap(standardize_embedding)(extra).T],
-            axis=1,
-        )
-    else:
-        emb = standardize_embedding(v)[:, None]
+    v0 = init_power_vectors(krand, d, n_vectors, dtype=a.dtype)
+    v, t_cols, done = batched_power_iteration(
+        lambda vv: w @ vv, v0, eps, max_iter)
+    emb = standardize_columns(v)
     labels, _cent = kmeans(kkm, emb, k, iters=kmeans_iters)
-    return PICResult(labels=labels, embedding=v, n_iter=n_iter, converged=converged)
+    return PICResult(labels=labels, embedding=v[:, 0], n_iter=t_cols[0],
+                     converged=done[0])
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .tuning import round_up_to_lcm
+
 
 def _affinity_kernel(
     xr_ref, xc_ref, sqr_ref, sqc_ref,  # inputs
@@ -85,7 +87,7 @@ def affinity_and_degree(
     for the cosine kinds pass L2-row-normalized features.
     """
     n, m = xn.shape
-    n_pad = pl.cdiv(n, max(tm, tn)) * max(tm, tn)
+    n_pad = round_up_to_lcm(n, tm, tn)  # both grid dims must divide evenly
     if n_pad != n:
         xn = jnp.pad(xn, ((0, n_pad - n), (0, 0)))
     x32 = xn.astype(jnp.float32)

@@ -1,55 +1,222 @@
-"""Public jit'd wrappers over the Pallas kernels.
+"""Public dispatch layer over the kernel implementations.
 
-On non-TPU backends (this container is CPU-only) the kernels execute in
-``interpret=True`` mode — the kernel body runs in Python/XLA per grid step,
-which validates correctness of the exact TPU program. On a real TPU the same
-calls lower to Mosaic. ``force_reference`` routes to the pure-jnp oracle
-(used by benchmarks to compare fused-kernel vs unfused-reference HLO).
+Each op is registered in a (op, mode) table with up to three execution
+modes (DESIGN.md §7):
+
+  'pallas'     — the fused Pallas TPU kernels. On non-TPU backends (this
+                 container is CPU-only) they execute in ``interpret=True``
+                 mode: the kernel body runs in Python/XLA per grid step,
+                 which validates correctness of the exact TPU program. On a
+                 real TPU the same calls lower to Mosaic.
+  'streaming'  — A-free Pallas kernels that regenerate affinity tiles on
+                 the fly inside the power step (kernels/streaming.py).
+  'reference'  — the pure-jnp oracles (kernels/ref.py), used by tests and
+                 by benchmarks to compare fused-kernel vs unfused HLO.
+
+The backend probe is evaluated ONCE at import (it cannot change within a
+process) and can be pinned explicitly for CI / TPU runs with the
+``REPRO_FORCE_INTERPRET`` env var: 1/true/interpret forces interpret mode,
+0/false/compiled forces compiled Mosaic lowering.
+
+Tile sizes default to the static autotuner in kernels/tuning.py; pass
+``tm``/``tn`` to override.
 """
 from __future__ import annotations
 
+import os
+from typing import Callable
+
 import jax
+import jax.numpy as jnp
 
 from . import ref
 from .affinity import affinity_and_degree as _affinity_pallas
 from .kmeans_assign import kmeans_assign as _assign_pallas
+from .power_step import degree_normalized_matmat as _dnmm_pallas
 from .power_step import degree_normalized_matvec as _dnmv_pallas
 from .power_step import power_step as _power_pallas
+from .streaming import affinity_degree_streaming as _degree_streaming
+from .streaming import affinity_matmat as _streaming_pallas
+from .tuning import choose_tiles
+
+_INTERPRET_ENV = "REPRO_FORCE_INTERPRET"
 
 
-def _interpret() -> bool:
+def _probe_interpret() -> bool:
+    """True when kernels must run in interpret mode (once, at import)."""
+    val = os.environ.get(_INTERPRET_ENV, "").strip().lower()
+    if val in ("1", "true", "interpret"):
+        return True
+    if val in ("0", "false", "compiled"):
+        return False
     return jax.default_backend() != "tpu"
 
 
+_INTERPRET: bool = _probe_interpret()
+
+
+def _interpret() -> bool:
+    return _INTERPRET
+
+
+# ---------------------------------------------------------------------------
+# (op, mode) registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[tuple[str, str], Callable] = {}
+
+
+def register(op: str, mode: str):
+    """Decorator: register ``fn`` as the ``mode`` implementation of ``op``."""
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[(op, mode)] = fn
+        return fn
+
+    return deco
+
+
+def dispatch(op: str, mode: str) -> Callable:
+    """Resolve an implementation; raises with the available modes on miss."""
+    try:
+        return _REGISTRY[(op, mode)]
+    except KeyError:
+        raise ValueError(
+            f"no {mode!r} implementation of {op!r}; available: "
+            f"{modes_for(op) or '(none)'}"
+        ) from None
+
+
+def modes_for(op: str) -> tuple[str, ...]:
+    return tuple(sorted(m for (o, m) in _REGISTRY if o == op))
+
+
+def _resolve_mode(mode: str | None, force_reference: bool,
+                  default: str = "pallas") -> str:
+    if mode is not None:
+        return mode
+    return "reference" if force_reference else default
+
+
+def _tiles(n: int, tm: int | None, tn: int | None, *, r: int = 1,
+           m: int = 0, a_bytes: int = 4) -> tuple[int, int]:
+    if tm is not None and tn is not None:
+        return tm, tn
+    atm, atn = choose_tiles(n, r=r, m=m, a_bytes=a_bytes)
+    return tm or atm, tn or atn
+
+
+# -- registrations ----------------------------------------------------------
+
+register("affinity_and_degree", "pallas")(_affinity_pallas)
+register("affinity_and_degree", "reference")(ref.affinity_and_degree_ref)
+register("degree_normalized_matvec", "pallas")(_dnmv_pallas)
+register("degree_normalized_matvec", "reference")(ref.degree_normalized_matvec_ref)
+register("degree_normalized_matmat", "pallas")(_dnmm_pallas)
+register("degree_normalized_matmat", "reference")(ref.degree_normalized_matmat_ref)
+register("streaming_matmat", "streaming")(_streaming_pallas)
+register("streaming_matmat", "reference")(ref.affinity_matmat_ref)
+register("streaming_degree", "streaming")(_degree_streaming)
+register("streaming_degree", "reference")(ref.affinity_degree_streaming_ref)
+register("power_step", "pallas")(_power_pallas)
+register("power_step", "reference")(ref.power_step_ref)
+register("kmeans_assign", "pallas")(_assign_pallas)
+register("kmeans_assign", "reference")(ref.kmeans_assign_ref)
+
+
+# ---------------------------------------------------------------------------
+# Public jit-friendly wrappers (stable API; modules call these, not the
+# registry directly).
+# ---------------------------------------------------------------------------
+
+
 def affinity_and_degree(xn, *, kind="cosine_shifted", sigma=1.0,
-                        tm=256, tn=256, force_reference=False):
+                        tm=None, tn=None, out_dtype=jnp.float32,
+                        force_reference=False, mode=None):
     """Fused A + D build (paper kernels 1-2). See kernels/affinity.py."""
-    if force_reference:
-        return ref.affinity_and_degree_ref(xn, kind=kind, sigma=sigma)
-    return _affinity_pallas(
-        xn, kind=kind, sigma=sigma, tm=tm, tn=tn, interpret=_interpret()
+    mode = _resolve_mode(mode, force_reference)
+    if mode == "reference":
+        a, deg = ref.affinity_and_degree_ref(xn, kind=kind, sigma=sigma)
+        return a.astype(out_dtype), deg   # honor O4 storage dtype here too
+    tm, tn = _tiles(xn.shape[0], tm, tn, m=xn.shape[1],
+                    a_bytes=jnp.dtype(out_dtype).itemsize)
+    return dispatch("affinity_and_degree", mode)(
+        xn, kind=kind, sigma=sigma, tm=tm, tn=tn, out_dtype=out_dtype,
+        interpret=_interpret(),
     )
 
 
-def degree_normalized_matvec(a, v, d, *, tm=256, tn=256, force_reference=False):
+def degree_normalized_matvec(a, v, d, *, tm=None, tn=None,
+                             force_reference=False, mode=None):
     """u = (A v)/d — fused paper kernels 3+6 (W never materialized)."""
-    if force_reference:
+    mode = _resolve_mode(mode, force_reference)
+    if mode == "reference":
         return ref.degree_normalized_matvec_ref(a, v, d)
-    return _dnmv_pallas(a, v, d, tm=tm, tn=tn, interpret=_interpret())
+    tm, tn = _tiles(a.shape[0], tm, tn, a_bytes=a.dtype.itemsize)
+    return dispatch("degree_normalized_matvec", mode)(
+        a, v, d, tm=tm, tn=tn, interpret=_interpret()
+    )
 
 
-def power_step(a, v, d, *, tm=256, tn=256, force_reference=False):
+def degree_normalized_matmat(a, v, d, *, tm=None, tn=None,
+                             force_reference=False, mode=None):
+    """U = (A V)/d for V (n, r) — ONE HBM sweep of A for all r vectors."""
+    mode = _resolve_mode(mode, force_reference)
+    if mode == "reference":
+        return ref.degree_normalized_matmat_ref(a, v, d)
+    tm, tn = _tiles(a.shape[0], tm, tn, r=v.shape[1],
+                    a_bytes=a.dtype.itemsize)
+    return dispatch("degree_normalized_matmat", mode)(
+        a, v, d, tm=tm, tn=tn, interpret=_interpret()
+    )
+
+
+def streaming_matmat(x, v, d=None, *, kind="cosine_shifted", sigma=1.0,
+                     tm=None, tn=None, force_reference=False, mode=None):
+    """U = (A V)/d with A regenerated on the fly — no (n, n) allocation."""
+    mode = _resolve_mode(mode, force_reference, default="streaming")
+    if mode == "reference":
+        return ref.affinity_matmat_ref(x, v, d, kind=kind, sigma=sigma)
+    tm, tn = _tiles(x.shape[0], tm, tn, r=v.shape[1], m=x.shape[1])
+    return dispatch("streaming_matmat", mode)(
+        x, v, d, kind=kind, sigma=sigma, tm=tm, tn=tn,
+        interpret=_interpret(),
+    )
+
+
+def streaming_degree(x, *, kind="cosine_shifted", sigma=1.0,
+                     tm=None, tn=None, force_reference=False, mode=None):
+    """Degree vector D = A 1 in one streamed sweep (RowSum without A)."""
+    mode = _resolve_mode(mode, force_reference, default="streaming")
+    if mode == "reference":
+        return ref.affinity_degree_streaming_ref(x, kind=kind, sigma=sigma)
+    tm, tn = _tiles(x.shape[0], tm, tn, m=x.shape[1])
+    return dispatch("streaming_degree", mode)(
+        x, kind=kind, sigma=sigma, tm=tm, tn=tn, interpret=_interpret()
+    )
+
+
+def power_step(a, v, d, *, tm=None, tn=None, force_reference=False,
+               mode=None):
     """v' = W v / ||W v||_1 — one full paper iteration (kernels 6+4+5)."""
-    if force_reference:
+    mode = _resolve_mode(mode, force_reference)
+    if mode == "reference":
         return ref.power_step_ref(a, v, d)
-    return _power_pallas(a, v, d, tm=tm, tn=tn, interpret=_interpret())
+    r = 1 if v.ndim == 1 else v.shape[1]
+    tm, tn = _tiles(a.shape[0], tm, tn, r=r, a_bytes=a.dtype.itemsize)
+    return dispatch("power_step", mode)(
+        a, v, d, tm=tm, tn=tn, interpret=_interpret()
+    )
 
 
-def kmeans_assign(x, cents, *, tm=512, force_reference=False):
+def kmeans_assign(x, cents, *, tm=512, force_reference=False, mode=None):
     """k-means assignment (labels, sq-dists)."""
-    if force_reference:
+    mode = _resolve_mode(mode, force_reference)
+    if mode == "reference":
         return ref.kmeans_assign_ref(x, cents)
-    return _assign_pallas(x, cents, tm=tm, interpret=_interpret())
+    return dispatch("kmeans_assign", mode)(
+        x, cents, tm=tm, interpret=_interpret()
+    )
 
 
 def flash_attention(q, k, v, *, causal=True, block_q=512, block_k=512,
@@ -59,4 +226,4 @@ def flash_attention(q, k, v, *, causal=True, block_q=512, block_k=512,
     if force_reference:
         return ref.flash_attention_ref(q, k, v, causal=causal)
     return _flash_pallas(q, k, v, causal=causal, block_q=block_q,
-                         block_k=block_k, interpret=_interpret())
+                        block_k=block_k, interpret=_interpret())

@@ -1,22 +1,31 @@
-"""Pallas TPU kernel: fused power-iteration step.
+"""Pallas TPU kernel: fused multi-vector power-iteration step.
 
 TPU adaptation of the paper's ``Multiply`` + ``Reduction`` + ``Norm`` CUDA
-kernels (DESIGN.md §2). Computes in ONE sweep of A:
+kernels (DESIGN.md §2), generalized to r power vectors at once. Computes in
+ONE sweep of A:
 
-    u = (A @ v) / d          (the degree-normalized matvec — note that
-                              W v = (D^-1 A) v = D^-1 (A v), so W is never
-                              materialized: the paper's NormMatrix kernel
-                              and its O(n^2) extra read+write disappear — O1b)
-    partial L1 mass of u     (per row-tile, combined on the VPU afterwards)
+    U = (A @ V) / d          for V of shape (n, r) — the degree-normalized
+                             mat-mat. W V = (D^-1 A) V = D^-1 (A V), so W is
+                             never materialized: the paper's NormMatrix kernel
+                             and its O(n^2) extra read+write disappear — O1b.
+                             The skinny (TM, TN) x (TN, r) product runs on the
+                             MXU and amortizes the single HBM read of each A
+                             tile across all r vectors (DESIGN.md §4): r times
+                             the flops for the same O(n^2) memory traffic.
+    partial L1 mass of U     (per row-tile per column, combined on the VPU)
 
-The final scalar division v_{t+1} = u / ||u||_1 is an O(n) epilogue outside
-the kernel (the tiny combine the paper does with its tree-Reduction kernel;
-on TPU this is a trivial jnp.sum — the CUDA interleaved-addressing pattern
-has no TPU analogue, see DESIGN.md §8).
+The final per-column division V_{t+1} = U / ||U||_1 is an O(n r) epilogue
+outside the kernel (the tiny combine the paper does with its tree-Reduction
+kernel; on TPU this is a trivial jnp.sum — the CUDA interleaved-addressing
+pattern has no TPU analogue, see DESIGN.md §8).
 
-Grid: (n/TM, n/TN), accumulating the matvec across the col-grid dimension j
+A may be stored in bf16 (O4): tiles are upcast to f32 on load so the MXU
+accumulates in f32 while HBM traffic halves (DESIGN.md §6).
+
+Grid: (n/TM, n/TN), accumulating the product across the col-grid dimension j
 (TPU grid order is sequential, minor-to-major, so revisiting the same output
-block is the idiomatic accumulation pattern).
+block is the idiomatic accumulation pattern). n pads to lcm(TM, TN) so both
+grid dimensions divide evenly for any tile pair.
 """
 from __future__ import annotations
 
@@ -26,15 +35,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .tuning import round_up_to_lcm
+
 
 def _power_step_kernel(a_ref, v_ref, d_ref, u_ref, *, nj: int):
     j = pl.program_id(1)
 
-    a = a_ref[...]                       # (TM, TN) tile of A
-    v = v_ref[...]                       # (TN, 1) slice of v
+    a = a_ref[...].astype(jnp.float32)   # (TM, TN) tile of A (f32 or bf16)
+    v = v_ref[...]                       # (TN, r) slice of V
     partial = jax.lax.dot_general(
         a, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )                                    # (TM, 1)
+    )                                    # (TM, r)
 
     @pl.when(j == 0)
     def _init():
@@ -52,6 +63,44 @@ def _power_step_kernel(a_ref, v_ref, d_ref, u_ref, *, nj: int):
 
 
 @functools.partial(jax.jit, static_argnames=("tm", "tn", "interpret"))
+def degree_normalized_matmat(
+    a: jax.Array,
+    v: jax.Array,
+    d: jax.Array,
+    *,
+    tm: int = 256,
+    tn: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """U = (A @ V) / d[:, None], one fused HBM sweep of A for all r columns.
+
+    Shapes: a (n, n) [f32 or bf16 storage], v (n, r), d (n,); returns (n, r)
+    f32. The single-vector ``degree_normalized_matvec`` is the r=1 case.
+    """
+    n = a.shape[0]
+    r = v.shape[1]
+    n_pad = round_up_to_lcm(n, tm, tn)
+    if n_pad != n:
+        a = jnp.pad(a, ((0, n_pad - n), (0, n_pad - n)))
+        v = jnp.pad(v, ((0, n_pad - n), (0, 0)))
+        d = jnp.pad(d, (0, n_pad - n), constant_values=1.0)
+
+    grid = (n_pad // tm, n_pad // tn)
+    u = pl.pallas_call(
+        functools.partial(_power_step_kernel, nj=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+            pl.BlockSpec((tn, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, r), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, r), jnp.float32),
+        interpret=interpret,
+    )(a, v.astype(jnp.float32), d.astype(jnp.float32)[:, None])
+    return u[:n]
+
+
 def degree_normalized_matvec(
     a: jax.Array,
     v: jax.Array,
@@ -61,36 +110,22 @@ def degree_normalized_matvec(
     tn: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
-    """u = (A @ v) / d, one fused HBM sweep of A. Shapes: (n,n), (n,), (n,)."""
-    n = a.shape[0]
-    blk = max(tm, tn)
-    n_pad = pl.cdiv(n, blk) * blk
-    if n_pad != n:
-        a = jnp.pad(a, ((0, n_pad - n), (0, n_pad - n)))
-        v = jnp.pad(v, (0, n_pad - n))
-        d = jnp.pad(d, (0, n_pad - n), constant_values=1.0)
-
-    grid = (n_pad // tm, n_pad // tn)
-    u = pl.pallas_call(
-        functools.partial(_power_step_kernel, nj=grid[1]),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
-            pl.BlockSpec((tn, 1), lambda i, j: (j, 0)),
-            pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
-        interpret=interpret,
-    )(a.astype(a.dtype), v.astype(jnp.float32)[:, None],
-      d.astype(jnp.float32)[:, None])
-    return u[:n, 0]
+    """u = (A @ v) / d — the r=1 column of the fused mat-mat kernel."""
+    return degree_normalized_matmat(
+        a, v[:, None], d, tm=tm, tn=tn, interpret=interpret
+    )[:, 0]
 
 
 def power_step(
     a: jax.Array, v: jax.Array, d: jax.Array, *, tm: int = 256, tn: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
-    """Full paper power step: v_{t+1} = (W v) / ||W v||_1 with W = D^-1 A."""
-    u = degree_normalized_matvec(a, v, d, tm=tm, tn=tn, interpret=interpret)
-    return u / jnp.maximum(jnp.sum(jnp.abs(u)), 1e-30)
+    """Full paper power step: V_{t+1} = (W V) / ||W V||_1 with W = D^-1 A.
+
+    Accepts v of shape (n,) or (n, r); the L1 normalization is per column.
+    """
+    if v.ndim == 1:
+        u = degree_normalized_matvec(a, v, d, tm=tm, tn=tn, interpret=interpret)
+        return u / jnp.maximum(jnp.sum(jnp.abs(u)), 1e-30)
+    u = degree_normalized_matmat(a, v, d, tm=tm, tn=tn, interpret=interpret)
+    return u / jnp.maximum(jnp.sum(jnp.abs(u), axis=0, keepdims=True), 1e-30)

@@ -33,6 +33,38 @@ def degree_normalized_matvec_ref(
     return u / jnp.maximum(d.astype(jnp.float32), 1e-30)
 
 
+def degree_normalized_matmat_ref(
+    a: jax.Array, v: jax.Array, d: jax.Array
+) -> jax.Array:
+    """Oracle for kernels.power_step.degree_normalized_matmat (v is (n, r))."""
+    u = a.astype(jnp.float32) @ v.astype(jnp.float32)
+    return u / jnp.maximum(d.astype(jnp.float32), 1e-30)[:, None]
+
+
+def affinity_matmat_ref(
+    x: jax.Array,
+    v: jax.Array,
+    d: jax.Array | None = None,
+    *,
+    kind: str = "cosine_shifted",
+    sigma: float = 1.0,
+) -> jax.Array:
+    """Oracle for kernels.streaming.affinity_matmat: (A @ V) / d, dense A."""
+    a, _ = affinity_and_degree_ref(x, kind=kind, sigma=sigma)
+    u = a @ v.astype(jnp.float32)
+    if d is None:
+        return u
+    return u / jnp.maximum(d.astype(jnp.float32), 1e-30)[:, None]
+
+
+def affinity_degree_streaming_ref(
+    x: jax.Array, *, kind: str = "cosine_shifted", sigma: float = 1.0
+) -> jax.Array:
+    """Oracle for kernels.streaming.affinity_degree_streaming."""
+    _, deg = affinity_and_degree_ref(x, kind=kind, sigma=sigma)
+    return deg
+
+
 def power_step_ref(a: jax.Array, v: jax.Array, d: jax.Array) -> jax.Array:
     """Oracle for kernels.power_step.power_step."""
     u = degree_normalized_matvec_ref(a, v, d)

@@ -1,0 +1,227 @@
+"""Pallas TPU kernel: streaming (A-free) affinity x power-vector fusion.
+
+Computes U = (A @ V) / d WITHOUT ever materializing A (DESIGN.md §5): each
+(i, j) grid step regenerates the (TM, TN) affinity tile on the MXU from the
+(TM, m) row slab and (TN, m) col slab of the features — exactly the tile the
+``affinity_and_degree`` kernel would have written to HBM — applies the
+similarity transform and diagonal/padding masks on the VPU, multiplies the
+tile by the (TN, r) slice of V, and accumulates the (TM, r) output block.
+
+This is the paper's AffinityMatrix kernel fused INTO the power step: instead
+of one O(n^2) write at build time plus an O(n^2) read per iteration, the
+engine pays 2 n m reads per tile row/col pass and O(n^2 m / TILE) extra
+flops — a bandwidth->compute trade that wins whenever A would spill HBM
+(the paper's 36.5 GB matrix at n = 45k) or whenever m << TILE. Unlike the
+jnp matrix-free path (cosine kinds only, DESIGN.md §2 O2) this works for
+ALL affinity kinds including rbf, because the tile transform is elementwise.
+
+Passing d = ones (or ``affinity_matmat(..., d=None)``) turns off the degree
+normalization, which with V = ones((n, 1)) computes the degree vector itself
+in one streamed sweep — the RowSum kernel without the matrix.
+
+Grid: (n/TM, n/TN) with n padded to lcm(TM, TN); accumulation over the
+col-grid dimension j, same revisit pattern as kernels/power_step.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tuning import round_up_to_lcm
+
+
+def _streaming_kernel(
+    xr_ref, xc_ref, sqr_ref, sqc_ref, v_ref, d_ref,   # inputs
+    u_ref,                                            # output
+    *, kind: str, n: int, tm: int, tn: int, inv_two_sigma_sq: float, nj: int,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    xr = xr_ref[...]                   # (TM, m) row slab
+    xc = xc_ref[...]                   # (TN, m) col slab
+    dot = jax.lax.dot_general(
+        xr, xc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                  # (TM, TN) affinity tile on the MXU
+
+    if kind == "cosine":
+        a = dot
+    elif kind == "cosine_shifted":
+        a = 0.5 * (1.0 + dot)
+    elif kind == "rbf":
+        d2 = sqr_ref[...] + sqc_ref[...].T - 2.0 * dot   # (TM,1)+(1,TN)
+        a = jnp.exp(-jnp.maximum(d2, 0.0) * inv_two_sigma_sq)
+    else:
+        raise ValueError(kind)
+
+    rows = i * tm + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 0)
+    cols = j * tn + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 1)
+    valid = (rows != cols) & (rows < n) & (cols < n)
+    a = jnp.where(valid, a, 0.0)
+
+    v = v_ref[...]                     # (TN, r) slice of V
+    partial = jax.lax.dot_general(
+        a, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                  # (TM, r)
+
+    @pl.when(j == 0)
+    def _init():
+        u_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        u_ref[...] += partial
+
+    @pl.when(j == nj - 1)
+    def _norm():
+        d = d_ref[...]                 # (TM, 1)
+        u_ref[...] = u_ref[...] / jnp.maximum(d, 1e-30)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "sigma", "tm", "tn", "interpret"),
+)
+def affinity_matmat(
+    x: jax.Array,
+    v: jax.Array,
+    d: jax.Array | None = None,
+    *,
+    kind: str = "cosine_shifted",
+    sigma: float = 1.0,
+    tm: int = 256,
+    tn: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """U = (A @ V) / d with A regenerated tile-by-tile from features ``x``.
+
+    Shapes: x (n, m), v (n, r), d (n,) or None (no normalization); returns
+    (n, r) f32. For the cosine kinds pass L2-row-normalized features; for
+    ``rbf`` pass raw features plus the bandwidth ``sigma``. No (n, n) array
+    is ever allocated — peak memory is O(n m + n r).
+    """
+    n, m = x.shape
+    r = v.shape[1]
+    n_pad = round_up_to_lcm(n, tm, tn)
+    if d is None:
+        d = jnp.ones((n,), jnp.float32)
+    if n_pad != n:
+        x = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+        v = jnp.pad(v, ((0, n_pad - n), (0, 0)))
+        d = jnp.pad(d, (0, n_pad - n), constant_values=1.0)
+    x32 = x.astype(jnp.float32)
+    sq = jnp.sum(x32 * x32, axis=1, keepdims=True)       # (n_pad, 1)
+
+    grid = (n_pad // tm, n_pad // tn)
+    kernel = functools.partial(
+        _streaming_kernel,
+        kind=kind, n=n, tm=tm, tn=tn,
+        inv_two_sigma_sq=float(1.0 / (2.0 * sigma * sigma)),
+        nj=grid[1],
+    )
+    u = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, m), lambda i, j: (i, 0)),   # row slab
+            pl.BlockSpec((tn, m), lambda i, j: (j, 0)),   # col slab
+            pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),   # row sq-norms
+            pl.BlockSpec((tn, 1), lambda i, j: (j, 0)),   # col sq-norms
+            pl.BlockSpec((tn, r), lambda i, j: (j, 0)),   # V slice
+            pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),   # degree
+        ],
+        out_specs=pl.BlockSpec((tm, r), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, r), jnp.float32),
+        interpret=interpret,
+    )(x32, x32, sq, sq, v.astype(jnp.float32),
+      d.astype(jnp.float32)[:, None])
+    return u[:n]
+
+
+def _streaming_degree_kernel(
+    xr_ref, xc_ref, sqr_ref, sqc_ref, d_ref,
+    *, kind: str, n: int, tm: int, tn: int, inv_two_sigma_sq: float,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    xr = xr_ref[...]
+    xc = xc_ref[...]
+    dot = jax.lax.dot_general(
+        xr, xc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    if kind == "cosine":
+        a = dot
+    elif kind == "cosine_shifted":
+        a = 0.5 * (1.0 + dot)
+    elif kind == "rbf":
+        d2 = sqr_ref[...] + sqc_ref[...].T - 2.0 * dot
+        a = jnp.exp(-jnp.maximum(d2, 0.0) * inv_two_sigma_sq)
+    else:
+        raise ValueError(kind)
+
+    rows = i * tm + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 0)
+    cols = j * tn + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 1)
+    valid = (rows != cols) & (rows < n) & (cols < n)
+    a = jnp.where(valid, a, 0.0)
+
+    # identical VPU reduction to the fused RowSum in kernels/affinity.py, so
+    # the streaming engine's degrees (and hence its whole power trajectory)
+    # are bitwise-equal to the explicit-A engine's at matching tile sizes
+    partial = jnp.sum(a, axis=1, keepdims=True)          # (TM, 1)
+
+    @pl.when(j == 0)
+    def _init():
+        d_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        d_ref[...] += partial
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "sigma", "tm", "tn", "interpret"),
+)
+def affinity_degree_streaming(
+    x: jax.Array,
+    *,
+    kind: str = "cosine_shifted",
+    sigma: float = 1.0,
+    tm: int = 256,
+    tn: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Degree vector D = A @ 1 in one streamed sweep — the paper's
+    AffinityMatrix + RowSum fusion (O1a) without the O(n^2) A write."""
+    n, m = x.shape
+    n_pad = round_up_to_lcm(n, tm, tn)
+    if n_pad != n:
+        x = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    x32 = x.astype(jnp.float32)
+    sq = jnp.sum(x32 * x32, axis=1, keepdims=True)
+
+    grid = (n_pad // tm, n_pad // tn)
+    kernel = functools.partial(
+        _streaming_degree_kernel,
+        kind=kind, n=n, tm=tm, tn=tn,
+        inv_two_sigma_sq=float(1.0 / (2.0 * sigma * sigma)),
+    )
+    d = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
+        interpret=interpret,
+    )(x32, x32, sq, sq)
+    return d[:n, 0]

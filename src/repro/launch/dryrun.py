@@ -226,6 +226,8 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     # XLA's aggregate numbers (NO trip-count scaling — kept for reference)
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax wraps per-partition dicts in a list
+        cost = cost[0] if cost else {}
     xla_flops = float(cost.get("flops", 0.0))
     xla_bytes = float(cost.get("bytes accessed", 0.0))
     try:

@@ -24,10 +24,12 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"production mesh needs {n} devices, have {len(devs)} — the "
             "dry-run entry point sets XLA_FLAGS=--xla_force_host_platform_"
             "device_count=512 before importing jax")
-    from jax.sharding import AxisType
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devs[:n])
+    try:  # AxisType landed in jax 0.5; older jax defaults to Auto anyway
+        from jax.sharding import AxisType
+        kw = {"axis_types": (AxisType.Auto,) * len(axes)}
+    except ImportError:
+        kw = {}
+    return jax.make_mesh(shape, axes, devices=devs[:n], **kw)
 
 
 def _div(n: int, by: int) -> bool:

@@ -1,0 +1,137 @@
+"""Test-session config: deterministic mini-``hypothesis`` fallback.
+
+This container has no ``hypothesis`` wheel and nothing may be pip-installed,
+but three seed test modules import it at module scope — which previously
+killed collection for those whole files. When the real package is missing we
+install a small deterministic stand-in into ``sys.modules`` BEFORE
+collection: ``@given`` draws ``max_examples`` pseudo-random samples per
+strategy from a seed derived from the test name (stable across runs and
+machines) and runs the test body once per sample. It implements exactly the
+API surface this suite uses: ``given``, ``settings``, and the strategies
+``integers``, ``floats``, ``lists``, ``sampled_from``, ``data``,
+``composite``. When the real hypothesis IS available it is used untouched.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+def _install_hypothesis_fallback() -> None:
+    class Strategy:
+        def __init__(self, sample_fn):
+            self._sample = sample_fn
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    def integers(min_value, max_value):
+        return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def floats(min_value, max_value):
+        return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def sampled_from(elements):
+        seq = list(elements)
+        return Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def lists(elements, *, min_size=0, max_size=10):
+        def sample(rng):
+            size = rng.randint(min_size, max_size)
+            return [elements.sample(rng) for _ in range(size)]
+        return Strategy(sample)
+
+    class _DataObject:
+        """The interactive draw handle ``@given(st.data())`` provides."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.sample(self._rng)
+
+    class _DataStrategy(Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: _DataObject(rng))
+
+    def data():
+        return _DataStrategy()
+
+    def composite(fn):
+        @functools.wraps(fn)
+        def builder(*args, **kwargs):
+            def sample(rng):
+                return fn(_DataObject(rng).draw, *args, **kwargs)
+            return Strategy(sample)
+        return builder
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(test_fn):
+            @functools.wraps(test_fn)
+            def wrapper(*call_args, **call_kwargs):
+                n_examples = getattr(
+                    wrapper, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+                for i in range(n_examples):
+                    rng = random.Random(f"{test_fn.__qualname__}:{i}")
+                    drawn_args = tuple(s.sample(rng) for s in arg_strategies)
+                    drawn_kw = {k: s.sample(rng)
+                                for k, s in kw_strategies.items()}
+                    try:
+                        test_fn(*call_args, *drawn_args,
+                                **{**drawn_kw, **call_kwargs})
+                    except Exception:
+                        print(f"falsifying example ({i + 1}/{n_examples}): "
+                              f"args={drawn_args} kwargs={drawn_kw}",
+                              file=sys.stderr)
+                        raise
+            # hide the strategy-filled parameters from pytest's fixture
+            # resolution: expose only the params the runner must supply
+            # (``self`` for methods), as real hypothesis does
+            if hasattr(wrapper, "__wrapped__"):
+                del wrapper.__wrapped__
+            sig = inspect.signature(test_fn)
+            params = list(sig.parameters.values())
+            keep = [p for p in params if p.name == "self"]
+            remaining = [p for p in params if p.name != "self"]
+            remaining = remaining[len(arg_strategies):]
+            keep += [p for p in remaining if p.name not in kw_strategies]
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            wrapper.hypothesis_fallback = True
+            return wrapper
+        return deco
+
+    def settings(*_args, max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None,
+                 **_kwargs):
+        def deco(fn):
+            # cap the fallback's example count: it runs everything inline
+            # (no shrinking, no database), so parity with real-hypothesis
+            # run counts is not worth the wall-clock on CPU
+            fn._fallback_max_examples = min(max_examples, 50)
+            return fn
+        return deco
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.__version__ = "0.0-fallback"
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.lists = lists
+    st.sampled_from = sampled_from
+    st.data = data
+    st.composite = composite
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:
+    import hypothesis  # noqa: F401  (real package wins when present)
+except ModuleNotFoundError:
+    _install_hypothesis_fallback()
