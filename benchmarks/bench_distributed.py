@@ -1,0 +1,87 @@
+"""Distributed pipeline benchmark — per-path sweep timings on a host mesh.
+
+Times each sharded path (explicit stripes, streaming ring, matrix-free)
+against its single-device counterpart on an 8-virtual-device CPU mesh.
+The power loop is pinned to exact sweep counts (eps unreachably low), and
+each path is timed at TWO counts — ``iters`` and ``2*iters`` — so the
+reported per-sweep cost is the difference quotient: one-time cost
+(affinity build, k-means) cancels out and the tracked number is the cost
+of one sweep, per path, not build amortization or convergence luck. The
+one-time residual is reported as a separate ``setup`` row. On CPU
+interpret mode the absolute numbers are structural only (python per grid
+step) — compare ratios between paths and across snapshots.
+
+The measurement runs in a subprocess (XLA_FLAGS must set the device count
+before jax imports; the parent benchmark process keeps its single-device
+view), which prints finished CSV rows on stdout.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only distributed
+"""
+from __future__ import annotations
+
+from repro.testing import run_mesh_subprocess
+
+_SCRIPT = """
+    import time
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import GPICConfig, run_gpic
+    from repro.core.distributed import shard_points
+    from repro.data.synthetic import gaussians
+
+    n, r, iters = {n}, {r}, {iters}
+    mesh = jax.make_mesh((8,), ("data",))
+    x, _ = gaussians(n, k=3, seed=0)
+    xs = shard_points(x, mesh, "data")
+    xl = jnp.asarray(x)
+
+    def timed(fn, *args):
+        out = fn(*args)
+        jax.block_until_ready(out)           # compile + warm
+        ts = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(out)
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        return ts[len(ts) // 2]
+
+    # eps_scale ~0 => the loop never converges: exact sweep counts per run.
+    # Timing at iters and 2*iters cancels one-time cost (build, k-means)
+    # out of the difference quotient.
+    base = GPICConfig(affinity_kind="cosine_shifted", n_vectors=r,
+                      eps_scale=1e-300, kmeans_iters=5)
+    key = jax.random.key(0)
+
+    def per_sweep(x_in, cfg):
+        t1 = timed(lambda c: run_gpic(x_in, 3, c, key=key),
+                   cfg.with_(max_iter=iters))
+        t2 = timed(lambda c: run_gpic(x_in, 3, c, key=key),
+                   cfg.with_(max_iter=2 * iters))
+        sweep = max(t2 - t1, 1e-9) / iters
+        setup = max(t1 - sweep * iters, 0.0)
+        return sweep, setup
+
+    for path in ("explicit", "streaming", "matrix_free"):
+        cfg = base.with_(engine=path)
+        sweep_sd, setup_sd = per_sweep(xl, cfg)
+        sweep_ds, setup_ds = per_sweep(xs, cfg.with_(mesh=mesh))
+        print(f"distributed/{{path}}/single_device,{{sweep_sd*1e6:.1f}},"
+              f"n={{n}} r={{r}} per_sweep setup_us={{setup_sd*1e6:.1f}}")
+        print(f"distributed/{{path}}/mesh8,{{sweep_ds*1e6:.1f}},"
+              f"n={{n}} r={{r}} per_sweep setup_us={{setup_ds*1e6:.1f}} "
+              f"ratio_vs_single={{sweep_ds/sweep_sd:.2f}}x")
+    """
+
+
+def run(n: int = 1024, r: int = 4, iters: int = 5):
+    """Returns CSV rows (per-path sweep timings, single-device vs mesh)."""
+    out = run_mesh_subprocess(_SCRIPT.format(n=n, r=r, iters=iters),
+                              timeout=1800)
+    return [ln for ln in out.splitlines()
+            if ln.startswith("distributed/")]
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

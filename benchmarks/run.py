@@ -34,14 +34,14 @@ def main() -> None:
                     help="paper-scale sizes (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,table2,fig3,exp2,"
-                         "roofline,multivec")
-    ap.add_argument("--json", nargs="?", const="BENCH_PR1.json", default=None,
+                         "roofline,multivec,distributed")
+    ap.add_argument("--json", nargs="?", const="BENCH_PR2.json", default=None,
                     metavar="PATH",
-                    help="write a JSON perf snapshot (default BENCH_PR1.json)")
+                    help="write a JSON perf snapshot (default BENCH_PR2.json)")
     args = ap.parse_args()
 
-    from . import (bench_exp2, bench_fig3, bench_multivec, bench_table1,
-                   bench_table2, roofline)
+    from . import (bench_distributed, bench_exp2, bench_fig3, bench_multivec,
+                   bench_table1, bench_table2, roofline)
 
     jobs = {
         "table1": lambda: bench_table1.run(
@@ -57,6 +57,8 @@ def main() -> None:
         "roofline": roofline.run,
         "multivec": lambda: bench_multivec.run(
             n=2048 if args.full else 1024),
+        "distributed": lambda: bench_distributed.run(
+            n=2048 if args.full else 1024),
     }
     selected = (args.only.split(",") if args.only else list(jobs))
 
@@ -68,6 +70,8 @@ def main() -> None:
             for row in rows:
                 print(row, flush=True)
             if args.json:
+                # jobs["distributed"] is the per-path sweep-timing section
+                # tracked across PR snapshots
                 snapshot["jobs"][name] = _rows_to_records(rows)
         except Exception as e:  # keep the harness running
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}", file=sys.stderr)

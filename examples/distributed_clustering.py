@@ -1,8 +1,10 @@
 """Distributed GPIC on a multi-device mesh (the paper's multi-GPU future
-work, realized with shard_map).
+work, realized with shard_map over the operator pipeline — DESIGN.md §9).
 
 Runs on 8 virtual CPU devices; the identical code shards over the
-(pod, data) axes of the production mesh on real hardware.
+(pod, data) axes of the production mesh on real hardware. All three
+sharded paths run the SAME convergence engine as the single-device
+entry points — only the PowerOperator binding changes.
 
     PYTHONPATH=src python examples/distributed_clustering.py
 """
@@ -14,9 +16,9 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import adjusted_rand_index, pic_reference  # noqa: E402
-from repro.core.distributed import (  # noqa: E402
-    distributed_gpic, distributed_gpic_matrix_free, shard_points)
+from repro.core import (  # noqa: E402
+    GPICConfig, adjusted_rand_index, pic_reference, run_gpic)
+from repro.core.distributed import shard_points  # noqa: E402
 from repro.data import dataset_by_name  # noqa: E402
 
 
@@ -24,11 +26,12 @@ def main():
     mesh = jax.make_mesh((8,), ("data",))
     print(f"mesh: {mesh.shape}")
 
-    # explicit-A path: row-striped affinity, O(n) collectives per step
+    # explicit path: row-striped Pallas A build, O(n r) collectives per step
     x, y, k = dataset_by_name("three_circles", 1600, seed=0)
     xs = shard_points(x, mesh, "data")
-    res = distributed_gpic(xs, k, key=jax.random.key(1), mesh=mesh,
-                           affinity_kind="rbf", sigma=0.3, max_iter=300)
+    cfg = GPICConfig(mesh=mesh, shard_axes="data", affinity_kind="rbf",
+                     sigma=0.3, max_iter=300)
+    res = run_gpic(xs, k, cfg, key=jax.random.key(1))
     ari = adjusted_rand_index(y, np.asarray(res.labels))
     ref = pic_reference(jnp.asarray(x), k, key=jax.random.key(1),
                         affinity_kind="rbf", sigma=0.3, max_iter=300)
@@ -36,12 +39,22 @@ def main():
     print(f"explicit-A : ARI={ari:.3f} iters={int(res.n_iter)} "
           f"| single-device parity err={err:.2e}")
 
+    # streaming ring: A-free AND gather-free — O(n·m/P) per device, every
+    # affinity kind. The production configuration.
+    res_s = run_gpic(xs, k, cfg.with_(engine="streaming"),
+                     key=jax.random.key(1))
+    sd = run_gpic(jnp.asarray(x), k, cfg.with_(mesh=None, engine="streaming"),
+                  key=jax.random.key(1))
+    same = bool((np.asarray(res_s.labels) == np.asarray(sd.labels)).all())
+    print(f"streaming  : iters={int(res_s.n_iter)} "
+          f"| labels identical to single-device engine: {same}")
+
     # matrix-free path: O(m) collectives per step — the 1000-node layout
     x, y, k = dataset_by_name("gaussians", 80_000, seed=0)
     xs = shard_points(x, mesh, "data")
-    res = distributed_gpic_matrix_free(
-        xs, 3, key=jax.random.key(1), mesh=mesh,
-        affinity_kind="cosine_shifted", max_iter=50)
+    cfg = GPICConfig(engine="matrix_free", mesh=mesh, shard_axes="data",
+                     affinity_kind="cosine_shifted", max_iter=50)
+    res = run_gpic(xs, 3, cfg, key=jax.random.key(1))
     print(f"matrix-free: n=80k iters={int(res.n_iter)} "
           f"labels on host: {np.bincount(np.asarray(res.labels))}")
 

@@ -1,12 +1,15 @@
 """Quickstart: cluster the paper's synthetic datasets with GPIC.
 
+One config object, one entry point — ``run_gpic(x, k, GPICConfig(...))``
+routes to the right operator-backed engine (see DESIGN.md §9).
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import adjusted_rand_index, gpic, gpic_matrix_free, jaccard_index
+from repro.core import GPICConfig, adjusted_rand_index, jaccard_index, run_gpic
 from repro.data import dataset_by_name
 
 
@@ -15,20 +18,29 @@ def main():
     for name, sigma, nv in (("three_circles", 0.3, 1), ("cassini", 0.3, 2),
                             ("gaussians", 0.3, 1), ("smiley", 0.15, 1)):
         x, y, k = dataset_by_name(name, 1200, seed=0)
-        res = gpic(jnp.asarray(x), k, key=jax.random.key(1),
-                   affinity_kind="rbf", sigma=sigma, max_iter=400,
-                   n_vectors=nv)
+        cfg = GPICConfig(affinity_kind="rbf", sigma=sigma, max_iter=400,
+                         n_vectors=nv)
+        res = run_gpic(jnp.asarray(x), k, cfg, key=jax.random.key(1))
         ari = adjusted_rand_index(y, np.asarray(res.labels))
         jac = jaccard_index(y, np.asarray(res.labels))
         print(f"  {name:15s} k={k}  iters={int(res.n_iter):3d} "
               f"ARI={ari:.3f} Jaccard={jac:.3f}")
 
+    print("\nstreaming (A-free) engine on the same data — identical labels,"
+          " no (n, n) allocation:")
+    x, y, k = dataset_by_name("three_circles", 1200, seed=0)
+    cfg = GPICConfig(affinity_kind="rbf", sigma=0.3, max_iter=400)
+    res_e = run_gpic(jnp.asarray(x), k, cfg, key=jax.random.key(1))
+    res_s = run_gpic(jnp.asarray(x), k, cfg.with_(engine="streaming"),
+                     key=jax.random.key(1))
+    same = bool((np.asarray(res_e.labels) == np.asarray(res_s.labels)).all())
+    print(f"  three_circles explicit vs streaming: labels identical={same}")
+
     print("\nmatrix-free GPIC (beyond-paper O2) at n=100,000:")
     x, y, k = dataset_by_name("gaussians", 100_000, seed=0)
-    res = gpic_matrix_free(jnp.asarray(x), 3, key=jax.random.key(1),
-                           affinity_kind="cosine_shifted", max_iter=50)
-    # gaussians defaults to k=4; use 3 angular clusters for cosine affinity
-    x3, y3, _ = dataset_by_name("gaussians", 100_000, seed=0)
+    cfg = GPICConfig(engine="matrix_free", affinity_kind="cosine_shifted",
+                     max_iter=50)
+    res = run_gpic(jnp.asarray(x), 3, cfg, key=jax.random.key(1))
     print(f"  n=100k clustered in {int(res.n_iter)} power iterations "
           f"(A would be 40 GB; matrix-free uses ~1.6 MB)")
 

@@ -9,20 +9,41 @@ from .affinity import (
     row_normalize_features,
 )
 from .gpic import gpic, gpic_matrix_free
+from .operators import (
+    explicit_operator,
+    matrix_free_operator,
+    mesh_reductions,
+    sharded_explicit_operator,
+    sharded_matrix_free_operator,
+    sharded_streaming_operator,
+    streaming_operator,
+)
+from .pipeline import ENGINES, GPICConfig, run_gpic
 from .power import (
+    PowerOperator,
+    as_operator,
     batched_power_iteration,
     init_power_vectors,
+    init_power_vectors_local,
     standardize_columns,
 )
 from .kmeans import kmeans, kmeans_objective, kmeans_plus_plus_init
 from .metrics import adjusted_rand_index, jaccard_index, purity, rand_index
-from .pic import PICResult, pic_from_affinity, pic_reference, pic_serial_numpy
+from .pic import (
+    PICResult,
+    make_pic_result,
+    pic_from_affinity,
+    pic_reference,
+    pic_serial_numpy,
+)
 
 __all__ = [
     "affinity_matrix",
     "affinity_chunked",
+    "as_operator",
     "batched_power_iteration",
     "init_power_vectors",
+    "init_power_vectors_local",
     "matmat_matrix_free",
     "matvec_matrix_free",
     "degree_matrix_free",
@@ -36,10 +57,22 @@ __all__ = [
     "jaccard_index",
     "rand_index",
     "purity",
+    "ENGINES",
+    "GPICConfig",
+    "run_gpic",
+    "PowerOperator",
     "PICResult",
+    "make_pic_result",
     "pic_reference",
     "pic_from_affinity",
     "pic_serial_numpy",
     "gpic",
     "gpic_matrix_free",
+    "explicit_operator",
+    "streaming_operator",
+    "matrix_free_operator",
+    "mesh_reductions",
+    "sharded_explicit_operator",
+    "sharded_matrix_free_operator",
+    "sharded_streaming_operator",
 ]

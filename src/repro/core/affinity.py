@@ -113,7 +113,8 @@ def affinity_chunked(
 
 
 def matmat_matrix_free(
-    xn: jax.Array, v: jax.Array, kind: AffinityKind = "cosine_shifted"
+    xn: jax.Array, v: jax.Array, kind: AffinityKind = "cosine_shifted",
+    *, psum=None,
 ) -> jax.Array:
     """A @ V without materializing A (DESIGN.md §2, optimization O2).
 
@@ -125,11 +126,20 @@ def matmat_matrix_free(
     For cosine_shifted:   A V = (ΣV · 1 + X̂(X̂ᵀV))/2 − V  (diag is 1 → −1·V)
     Cost O(n·m·r) instead of O(n²·r); exact (same float ops up to
     association). ``xn`` must already be row-normalized.
+
+    ``psum`` finishes the cross-chunk sums when ``xn``/``v`` are the local
+    row chunks of a sharded matrix (it closes over the mesh axes; the
+    (m, r) block X̂ᵀV and the (r,) column sums ΣV are the ONLY values that
+    cross devices — O(m r) per sweep). None means single-chunk (identity).
+    The (n_loc, r) skinny product X̂ s is computed exactly once per sweep.
     """
+    if psum is None:
+        psum = lambda x: x
     if kind == "cosine":
-        return xn @ (xn.T @ v) - v
+        return xn @ psum(xn.T @ v) - v
     if kind == "cosine_shifted":
-        return 0.5 * (jnp.sum(v, axis=0) + xn @ (xn.T @ v)) - v
+        vsum = psum(jnp.sum(v, axis=0))
+        return 0.5 * (vsum + xn @ psum(xn.T @ v)) - v
     raise ValueError(f"matrix-free path supports cosine affinities, got {kind!r}")
 
 

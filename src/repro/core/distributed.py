@@ -1,25 +1,45 @@
 """Distributed GPIC via shard_map — the paper's multi-GPU future work, built
-for the production mesh (DESIGN.md §3).
+for the production mesh (DESIGN.md §3, §9).
+
+There is no distributed power loop and no distributed affinity math in this
+module: every path assembles a sharded :class:`~repro.core.power.PowerOperator`
+(core/operators.py) — the SAME Pallas kernel dispatch the single-device
+engines use, run on each device's row stripe inside ``shard_map`` — and
+hands it to the ONE convergence engine, ``core.power.batched_power_iteration``.
+The engine's ``sum``/``max``/``all_gather`` primitives are bound to
+``psum``/``pmax``/``all_gather`` over the mesh axes. The explicit path
+compiles the same tiled kernel program as the single-device build (tiles
+keyed on the global n); the streaming ring tiles per (n/P) block and
+accumulates blocks in rotated order, so its trajectories agree with the
+single-device engine at the ulp level rather than bitwise (DESIGN.md §9).
 
 Layouts:
-  explicit path:     A row-stripes sharded over the given mesh axes; X and V
-                     replicated via all-gather (X once, V per step — O(n r)
-                     bytes/step vs O(n²/P) compute: collective-light).
-  matrix-free path:  X̂ row-sharded; per step one psum of an (m, r) block and
-                     two (r,) psums. Collectives O(m r) per step — this is
-                     the configuration that scales to thousands of nodes.
+  explicit path:      A row-stripes built by the Pallas affinity kernel
+                      (bf16 A-storage O4 and fold_shift O5 supported); X and
+                      V replicated via all-gather (X once, V per step —
+                      O(n r) bytes/step vs O(n²/P) compute).
+  streaming path:     row-striped features, NO gathered copies: each sweep
+                      ring-rotates the (n/P, m) feature blocks with
+                      ppermute while the streaming kernel regenerates
+                      affinity stripe tiles on the fly. O(n·m/P) peak
+                      memory per device and every affinity kind — the
+                      production configuration.
+  matrix-free path:   X̂ row-sharded; per step one psum of an (m, r) block
+                      and one (r,) psum. Collectives O(m r) per step — the
+                      configuration that scales to thousands of nodes.
 
-Both paths run the batched multi-vector engine state (core/power.py
-semantics): ``n_vectors`` power vectors iterate as one (n, r) matrix, one
+All paths run the batched multi-vector engine state (core/power.py):
+``n_vectors`` power vectors iterate as one (n_loc, r) local chunk, one
 stripe sweep per iteration regardless of r, with per-column freezing so
 every column reproduces its dedicated single-vector trajectory.
 
-The final k-means runs on the (already replicated) (n, r) embedding
+The final k-means runs on the (gathered, replicated) (n, r) embedding
 identically on every device — deterministic, no collective needed.
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import Sequence
 
 import jax
@@ -27,82 +47,55 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .affinity import AffinityKind, row_normalize_features
+from .affinity import AffinityKind
 from .kmeans import kmeans
-from .pic import PICResult
-from .power import random_start_vectors, standardize_columns
+from .operators import (
+    _axis_tuple,
+    sharded_explicit_operator,
+    sharded_matrix_free_operator,
+    sharded_streaming_operator,
+)
+from .pic import PICResult, make_pic_result
+from .power import (
+    batched_power_iteration,
+    init_power_vectors_local,
+    random_start_vectors,
+    standardize_columns,
+)
 
 
-def _axis_tuple(axes) -> tuple[str, ...]:
-    return (axes,) if isinstance(axes, str) else tuple(axes)
+def _mesh_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
 
 
-def _replicated_power_loop(matmat_local, v0_full, n_loc, axes, eps, max_iter,
-                           idx):
-    """Batched power loop; each device owns rows [idx*n_loc, (idx+1)*n_loc).
-
-    ``matmat_local`` maps a full replicated (n, r) V to the local
-    (n_loc, r) chunk of (A V / d). Per-column freezing matches
-    core.power.batched_power_iteration exactly, with the L1/∞-norm
-    reductions psum/pmax'd over the mesh axes. Returns the *replicated*
-    final V plus per-column iteration stats.
-    """
-    r = v0_full.shape[1]
-
-    def cond(state):
-        t, _v, _delta, done, _t_cols = state
-        return jnp.logical_and(t < max_iter, jnp.logical_not(jnp.all(done)))
-
-    def body(state):
-        t, v_full, delta_loc, done, t_cols = state
-        u_loc = matmat_local(v_full)                            # (n_loc, r)
-        l1 = jax.lax.psum(jnp.sum(jnp.abs(u_loc), axis=0), axes)    # (r,)
-        v_loc = u_loc / jnp.maximum(l1, 1e-30)[None, :]
-        v_prev_loc = jax.lax.dynamic_slice(
-            v_full, (idx * n_loc, 0), (n_loc, r))
-        delta_next = jnp.abs(v_loc - v_prev_loc)
-        accel = jax.lax.pmax(
-            jnp.max(jnp.abs(delta_next - delta_loc), axis=0), axes)  # (r,)
-        v_loc = jnp.where(done[None, :], v_prev_loc, v_loc)
-        delta_next = jnp.where(done[None, :], delta_loc, delta_next)
-        t_cols = t_cols + jnp.where(done, 0, 1).astype(jnp.int32)
-        done = jnp.logical_or(done, accel <= eps)
-        v_next_full = jax.lax.all_gather(v_loc, axes, axis=0, tiled=True)
-        return t + 1, v_next_full, delta_next, done, t_cols
-
-    delta0 = jax.lax.dynamic_slice(v0_full, (idx * n_loc, 0), (n_loc, r))
-    state = (jnp.int32(0), v0_full, delta0,
-             jnp.zeros((r,), bool), jnp.zeros((r,), jnp.int32))
-    _t, v_full, _d, done, t_cols = jax.lax.while_loop(cond, body, state)
-    return v_full, t_cols, done
+def _local_slice(idx, n_loc, arr):
+    """The (n_loc, ...) row chunk of a replicated array at device ``idx``."""
+    return jax.lax.dynamic_slice_in_dim(arr, idx * n_loc, n_loc, axis=0)
 
 
-def _stripe_affinity(x_loc, x_full, row0, kind: str, sigma: float):
-    """Local (n_loc, n) affinity stripe with global-diagonal masking."""
-    n_loc = x_loc.shape[0]
-    n = x_full.shape[0]
-    if kind in ("cosine", "cosine_shifted"):
-        a = x_loc @ x_full.T
-        if kind == "cosine_shifted":
-            a = 0.5 * (1.0 + a)
-    elif kind == "rbf":
-        sq_l = jnp.sum(x_loc * x_loc, axis=1)
-        sq_f = jnp.sum(x_full * x_full, axis=1)
-        d2 = jnp.maximum(sq_l[:, None] + sq_f[None, :] - 2.0 * (x_loc @ x_full.T),
-                         0.0)
-        a = jnp.exp(-d2 / (2.0 * sigma * sigma))
-    else:
-        raise ValueError(kind)
-    rows = row0 + jnp.arange(n_loc)[:, None]
-    cols = jnp.arange(n)[None, :]
-    return a * (rows != cols)
+def _run_sharded(op, axes, *, key, u0t, k, eps, max_iter, kmeans_iters,
+                 force_reference=False):
+    """Seed the local engine state from the operator's degrees, run THE
+    convergence engine, gather once, and k-means the replicated embedding."""
+    idx = jax.lax.axis_index(_axis_tuple(axes))
+    n_loc = op.degree.shape[0]
+    u0t_loc = _local_slice(idx, n_loc, u0t)
+    v0_loc = init_power_vectors_local(
+        op.degree, u0t_loc, sum_fn=op.sum, dtype=jnp.float32)
+    v_loc, t_cols, done = batched_power_iteration(op, v0_loc, eps, max_iter)
+    v_full = op.all_gather(v_loc)                       # once, after the loop
+    emb = standardize_columns(v_full)
+    labels, _ = kmeans(key, emb, k, iters=kmeans_iters,
+                       force_reference=force_reference)
+    return labels, v_full, t_cols, done
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("k", "mesh", "shard_axes", "max_iter", "kmeans_iters",
                      "affinity_kind", "sigma", "eps_scale", "a_dtype",
-                     "fold_shift", "n_vectors"),
+                     "fold_shift", "n_vectors", "engine", "tile",
+                     "use_pallas"),
 )
 def distributed_gpic(
     x: jax.Array,
@@ -119,86 +112,65 @@ def distributed_gpic(
     a_dtype=jnp.float32,
     fold_shift: bool = False,
     n_vectors: int = 1,
+    engine: str = "explicit",
+    tile: int | None = None,
+    use_pallas: bool = True,
 ) -> PICResult:
-    """Explicit-A distributed GPIC (paper-faithful math, row-striped A).
+    """Sharded GPIC on the Pallas kernels (paper-faithful math, row stripes).
 
-    Beyond-paper options (identical math, recorded in EXPERIMENTS §Perf):
-      a_dtype=bf16 (O4): store the stripe in bf16; per-iteration A reads
-        halve; reductions stay f32-accumulated.
-      fold_shift (O5, cosine_shifted only): store RAW A' = X̂X̂ᵀ and fold
-        the (1+a)/2 transform + diagonal mask into the mat-mat algebra
-        ((AV)_i = 0.5(ΣV + (A'V)_i) − V_i, using a'_ii = 1) — the O(n²/P)
-        transform/mask passes over A disappear from the build.
-      n_vectors=r: the multi-vector engine — r power vectors in one
-        (n, r) state, ONE stripe sweep per iteration (DESIGN.md §4).
+    Engines (mirroring single-device ``gpic``):
+      engine='explicit'   per-device (n/P, n) stripe of the Pallas A build;
+                          V replicated per sweep. Beyond-paper options:
+                          a_dtype=bf16 (O4) halves per-iteration A reads;
+                          fold_shift (O5, cosine_shifted only) stores raw
+                          masked cosine and folds the shift into an O(n r)
+                          epilogue.
+      engine='streaming'  A-free ring: feature blocks rotate around the
+                          mesh with ppermute while affinity stripe tiles
+                          regenerate on the fly. O(n·m/P) peak memory, all
+                          affinity kinds — the production configuration.
+
+    ``n_vectors=r`` runs the multi-vector engine — r power vectors in one
+    (n, r) state, ONE stripe sweep per iteration (DESIGN.md §4).
     """
     axes = _axis_tuple(shard_axes)
     n = x.shape[0]
     eps = eps_scale / n
-    fold = fold_shift and affinity_kind == "cosine_shifted"
+    mesh_size = _mesh_size(mesh, axes)
     kkm, krand = jax.random.split(key)
     u0t = random_start_vectors(krand, n, n_vectors)
 
     def fn(x_loc, key, u0t):
-        idx = jax.lax.axis_index(axes)
-        n_loc = x_loc.shape[0]
-        row0 = idx * n_loc
-        if affinity_kind != "rbf":
-            x_loc = row_normalize_features(x_loc)
-        x_full = jax.lax.all_gather(x_loc, axes, axis=0, tiled=True)
-
-        if fold:
-            a_loc = jax.lax.dot_general(
-                x_loc, x_full, (((1,), (1,)), ((), ())),
-                preferred_element_type=a_dtype)   # bf16 out: single write
-            ones = jnp.ones((n,), jnp.float32)
-            d_raw = jax.lax.dot_general(
-                a_loc, ones.astype(a_dtype), (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
-            # d_i = sum_{j!=i} (1 + a'_ij)/2 = 0.5 (n - 2 + (A'1)_i)
-            d_loc = 0.5 * (n - 2.0 + d_raw)
+        if engine == "explicit":
+            op = sharded_explicit_operator(
+                x_loc, axes=axes, kind=affinity_kind, sigma=sigma,
+                a_dtype=a_dtype, fold_shift=fold_shift, tile=tile,
+                use_pallas=use_pallas)
+        elif engine == "streaming":
+            op = sharded_streaming_operator(
+                x_loc, axes=axes, mesh_size=mesh_size, kind=affinity_kind,
+                sigma=sigma, tile=tile, use_pallas=use_pallas)
         else:
-            a_f32 = _stripe_affinity(x_loc, x_full, row0, affinity_kind,
-                                     sigma)
-            d_loc = jnp.sum(a_f32, axis=1)      # degree in f32 (one pass)
-            a_loc = a_f32.astype(a_dtype)
-        dsum = jax.lax.psum(jnp.sum(d_loc), axes)
-        v0_loc = d_loc / jnp.maximum(dsum, 1e-30)
-        v0_full = jax.lax.all_gather(v0_loc, axes, axis=0, tiled=True)
-        v0_full = jnp.concatenate([v0_full[:, None], u0t], axis=1)
+            raise ValueError(f"unknown engine {engine!r} "
+                             "(expected 'explicit' or 'streaming')")
+        return _run_sharded(op, axes, key=key, u0t=u0t, k=k, eps=eps,
+                            max_iter=max_iter, kmeans_iters=kmeans_iters,
+                            force_reference=not use_pallas)
 
-        def mm(v_full):
-            av = jax.lax.dot_general(
-                a_loc, v_full.astype(a_dtype), (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)   # bf16 read, f32 accum
-            if fold:
-                sv = jnp.sum(v_full, axis=0)                    # (r,)
-                v_own = jax.lax.dynamic_slice(
-                    v_full, (row0, 0), (n_loc, v_full.shape[1]))
-                av = 0.5 * (sv[None, :] + av) - v_own
-            return av / jnp.maximum(d_loc, 1e-30)[:, None]
-
-        v_full, t_cols, done = _replicated_power_loop(
-            mm, v0_full, n_loc, axes, eps, max_iter, idx)
-        emb = standardize_columns(v_full)
-        labels, _ = kmeans(key, emb, k, iters=kmeans_iters)
-        return labels, v_full[:, 0], t_cols[0], done[0]
-
-    spec_x = P(axes)
     out = shard_map(
         fn, mesh=mesh,
-        in_specs=(spec_x, P(), P()),
+        in_specs=(P(axes), P(), P()),
         out_specs=(P(), P(), P(), P()),
         check_rep=False,
     )(x, kkm, u0t)
-    labels, v, t, done = out
-    return PICResult(labels=labels, embedding=v, n_iter=t, converged=done)
+    labels, v, t_cols, done = out
+    return make_pic_result(labels, v, t_cols, done)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("k", "mesh", "shard_axes", "max_iter", "kmeans_iters",
-                     "affinity_kind", "eps_scale", "n_vectors"),
+                     "affinity_kind", "eps_scale", "n_vectors", "use_pallas"),
 )
 def distributed_gpic_matrix_free(
     x: jax.Array,
@@ -212,6 +184,7 @@ def distributed_gpic_matrix_free(
     kmeans_iters: int = 25,
     affinity_kind: AffinityKind = "cosine_shifted",
     n_vectors: int = 1,
+    use_pallas: bool = True,
 ) -> PICResult:
     """Matrix-free distributed GPIC (O2): psum(m r) per step, scales to 1000s
     of nodes. Cosine affinity kinds only (they factor; DESIGN.md §2)."""
@@ -224,55 +197,12 @@ def distributed_gpic_matrix_free(
     u0t = random_start_vectors(krand, n, n_vectors)
 
     def fn(x_loc, key, u0t):
-        idx = jax.lax.axis_index(axes)
-        n_loc = x_loc.shape[0]
-        r = n_vectors
-        xn_loc = row_normalize_features(x_loc)
-
-        def mm_raw(v_loc):
-            # A V  =  f(X̂ (X̂ᵀ V)) − V, with the X̂ᵀV partial psum'd (O(m r))
-            s = jax.lax.psum(xn_loc.T @ v_loc, axes)          # (m, r)
-            av = xn_loc @ s - v_loc
-            if affinity_kind == "cosine_shifted":
-                vsum = jax.lax.psum(jnp.sum(v_loc, axis=0), axes)   # (r,)
-                av = 0.5 * (vsum[None, :] + xn_loc @ s) - v_loc
-            return av
-
-        d_loc = mm_raw(jnp.ones((n_loc, 1), xn_loc.dtype))[:, 0]
-        dsum = jax.lax.psum(jnp.sum(d_loc), axes)
-        v_loc = (d_loc / jnp.maximum(dsum, 1e-30))[:, None]
-        u0t_loc = jax.lax.dynamic_slice(
-            u0t, (idx * n_loc, 0), (n_loc, u0t.shape[1]))
-        v_loc = jnp.concatenate([v_loc, u0t_loc], axis=1)       # (n_loc, r)
-        delta_loc = v_loc
-
-        def cond(state):
-            t, _v, _delta, done, _t_cols = state
-            return jnp.logical_and(t < max_iter,
-                                   jnp.logical_not(jnp.all(done)))
-
-        def body(state):
-            t, v_loc, delta_loc, done, t_cols = state
-            u_loc = mm_raw(v_loc) / jnp.maximum(d_loc, 1e-30)[:, None]
-            l1 = jax.lax.psum(jnp.sum(jnp.abs(u_loc), axis=0), axes)  # (r,)
-            v_next = u_loc / jnp.maximum(l1, 1e-30)[None, :]
-            delta_next = jnp.abs(v_next - v_loc)
-            accel = jax.lax.pmax(
-                jnp.max(jnp.abs(delta_next - delta_loc), axis=0), axes)
-            v_next = jnp.where(done[None, :], v_loc, v_next)
-            delta_next = jnp.where(done[None, :], delta_loc, delta_next)
-            t_cols = t_cols + jnp.where(done, 0, 1).astype(jnp.int32)
-            done = jnp.logical_or(done, accel <= eps)
-            return t + 1, v_next, delta_next, done, t_cols
-
-        state = (jnp.int32(0), v_loc, delta_loc,
-                 jnp.zeros((r,), bool), jnp.zeros((r,), jnp.int32))
-        _t, v_loc, _d, done, t_cols = jax.lax.while_loop(cond, body, state)
-
-        v_full = jax.lax.all_gather(v_loc, axes, axis=0, tiled=True)  # once
-        emb = standardize_columns(v_full)
-        labels, _ = kmeans(key, emb, k, iters=kmeans_iters)
-        return labels, v_full[:, 0], t_cols[0], done[0]
+        op = sharded_matrix_free_operator(x_loc, axes=axes,
+                                          kind=affinity_kind)
+        # the sweep itself is jnp either way; the flag still governs k-means
+        return _run_sharded(op, axes, key=key, u0t=u0t, k=k, eps=eps,
+                            max_iter=max_iter, kmeans_iters=kmeans_iters,
+                            force_reference=not use_pallas)
 
     out = shard_map(
         fn, mesh=mesh,
@@ -280,12 +210,23 @@ def distributed_gpic_matrix_free(
         out_specs=(P(), P(), P(), P()),
         check_rep=False,
     )(x, kkm, u0t)
-    labels, v, t, done = out
-    return PICResult(labels=labels, embedding=v, n_iter=t, converged=done)
+    labels, v, t_cols, done = out
+    return make_pic_result(labels, v, t_cols, done)
 
 
 def shard_points(x, mesh: Mesh, shard_axes="data"):
-    """Places (n, m) host data row-sharded on the mesh (pads n to P)."""
+    """Places (n, m) host data row-sharded on the mesh.
+
+    n must divide evenly over the sharded device count (shard_map and the
+    streaming ring both need equal row blocks) — trim or pad the input
+    first; this raises a clear error instead of an opaque sharding one.
+    """
     axes = _axis_tuple(shard_axes)
+    x = jnp.asarray(x)
+    n_dev = _mesh_size(mesh, axes)
+    if x.shape[0] % n_dev:
+        raise ValueError(
+            f"shard_points: n={x.shape[0]} rows do not divide evenly over "
+            f"{n_dev} devices on axes {axes}; pad or trim the input first")
     sharding = NamedSharding(mesh, P(axes))
-    return jax.device_put(jnp.asarray(x), sharding)
+    return jax.device_put(x, sharding)

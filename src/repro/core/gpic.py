@@ -10,9 +10,10 @@ kernels map onto two fused Pallas kernels plus O(n) epilogues (DESIGN.md §2):
     paper kernel 4 Reduction      ┴→ kernels.ops.degree_normalized_matmat
     paper kernel 5 Norm            → O(n r) epilogue in the power loop
 
-All paths run the multi-vector power ENGINE (core/power.py): the iteration
-state is one (n, r) matrix and every iteration costs ONE sweep of A
-regardless of ``n_vectors`` (DESIGN.md §4). Engines:
+All paths assemble a PowerOperator (core/operators.py) and run the ONE
+multi-vector convergence engine (core/power.py): the iteration state is one
+(n, r) matrix and every iteration costs ONE sweep of A regardless of
+``n_vectors`` (DESIGN.md §4, §9). Engines:
 
   engine='explicit'   paper-faithful: build A once (optionally bf16-stored,
                       f32-accumulated — O4), then fused mat-mat sweeps.
@@ -24,6 +25,9 @@ regardless of ``n_vectors`` (DESIGN.md §4). Engines:
 ``gpic`` (explicit A) converges to the same result as ``pic_reference``
 (the paper's exactness claim). ``gpic_matrix_free`` is the beyond-paper O2
 jnp path: O(n·m) per iteration, cosine kinds only.
+
+Prefer the ``run_gpic``/``GPICConfig`` front door (core/pipeline.py) over
+assembling these keyword lists by hand.
 """
 from __future__ import annotations
 
@@ -32,10 +36,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..kernels import ops
-from .affinity import AffinityKind, matmat_matrix_free, row_normalize_features
+from .affinity import AffinityKind, row_normalize_features
 from .kmeans import kmeans
-from .pic import PICResult
+from .operators import (
+    explicit_operator,
+    matrix_free_operator,
+    streaming_operator,
+)
+from .pic import PICResult, make_pic_result
 from .power import (
     batched_power_iteration,
     init_power_vectors,
@@ -82,44 +90,29 @@ def gpic(
     inp = x if affinity_kind == "rbf" else row_normalize_features(x)
 
     if engine == "explicit":
-        a, d = ops.affinity_and_degree(
-            inp, kind=affinity_kind, sigma=sigma, tm=tile, tn=tile,
-            out_dtype=a_dtype, force_reference=not use_pallas,
-        )
-
-        def mm(v):
-            return ops.degree_normalized_matmat(
-                a, v, d, tm=tile, tn=tile, force_reference=not use_pallas
-            )
-
+        op = explicit_operator(inp, kind=affinity_kind, sigma=sigma,
+                               a_dtype=a_dtype, tile=tile,
+                               use_pallas=use_pallas)
     elif engine == "streaming":
-        d = ops.streaming_degree(
-            inp, kind=affinity_kind, sigma=sigma, tm=tile, tn=tile,
-            force_reference=not use_pallas,
-        )
-
-        def mm(v):
-            return ops.streaming_matmat(
-                inp, v, d, kind=affinity_kind, sigma=sigma, tm=tile, tn=tile,
-                force_reference=not use_pallas,
-            )
-
+        op = streaming_operator(inp, kind=affinity_kind, sigma=sigma,
+                                tile=tile, use_pallas=use_pallas)
     else:
         raise ValueError(f"unknown engine {engine!r} "
                          "(expected 'explicit' or 'streaming')")
 
     kkm, krand = jax.random.split(key)
-    v0 = init_power_vectors(krand, d, n_vectors)
-    v, t_cols, done = batched_power_iteration(mm, v0, eps, max_iter)
+    v0 = init_power_vectors(krand, op.degree, n_vectors)
+    v, t_cols, done = batched_power_iteration(op, v0, eps, max_iter)
     emb = standardize_columns(v)
-    labels, _ = kmeans(kkm, emb, k, iters=kmeans_iters)
-    return PICResult(labels=labels, embedding=v[:, 0], n_iter=t_cols[0],
-                     converged=done[0])
+    labels, _ = kmeans(kkm, emb, k, iters=kmeans_iters,
+                       force_reference=not use_pallas)
+    return make_pic_result(labels, v, t_cols, done)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "max_iter", "kmeans_iters", "affinity_kind", "n_vectors"),
+    static_argnames=("k", "max_iter", "kmeans_iters", "affinity_kind",
+                     "n_vectors", "use_pallas"),
 )
 def gpic_matrix_free(
     x: jax.Array,
@@ -131,6 +124,7 @@ def gpic_matrix_free(
     kmeans_iters: int = 25,
     affinity_kind: AffinityKind = "cosine_shifted",
     n_vectors: int = 1,
+    use_pallas: bool = True,
 ) -> PICResult:
     """Beyond-paper O2: PIC without materializing A (cosine kinds only).
 
@@ -142,16 +136,13 @@ def gpic_matrix_free(
     if eps is None:
         eps = 1e-5 / n
     xn = row_normalize_features(x)
-    d = matmat_matrix_free(xn, jnp.ones((n,), xn.dtype), affinity_kind)
-
-    def mm(v):
-        return matmat_matrix_free(xn, v, affinity_kind) / jnp.maximum(
-            d, 1e-30)[:, None]
+    op = matrix_free_operator(xn, kind=affinity_kind)
 
     kkm, krand = jax.random.split(key)
-    v0 = init_power_vectors(krand, d, n_vectors)
-    v, t_cols, done = batched_power_iteration(mm, v0, eps, max_iter)
+    v0 = init_power_vectors(krand, op.degree, n_vectors)
+    v, t_cols, done = batched_power_iteration(op, v0, eps, max_iter)
     emb = standardize_columns(v)
-    labels, _ = kmeans(kkm, emb, k, iters=kmeans_iters)
-    return PICResult(labels=labels, embedding=v[:, 0], n_iter=t_cols[0],
-                     converged=done[0])
+    # the sweep itself is jnp either way; the flag still governs k-means
+    labels, _ = kmeans(kkm, emb, k, iters=kmeans_iters,
+                       force_reference=not use_pallas)
+    return make_pic_result(labels, v, t_cols, done)

@@ -1,7 +1,12 @@
-"""k-means (kmeans++ init + Lloyd iterations) in pure JAX.
+"""k-means (kmeans++ init + Lloyd iterations) on the (op, mode) kernel registry.
 
-Used as the final step of PIC/GPIC (cluster the 1-D power-iteration embedding)
-and, more generally, on (n, d) embeddings (e.g. LM token-embedding clustering).
+Used as the final step of PIC/GPIC (cluster the power-iteration embedding)
+and, more generally, on (n, d) embeddings (e.g. LM token-embedding
+clustering). The Lloyd assignment step — the O(n·k·d) hot loop — dispatches
+through ``kernels.ops.kmeans_assign``: the fused Pallas kernel computes the
+squared distances on the MXU and the argmin on the VPU with no (n, k)
+distance matrix in HBM; ``force_reference=True`` routes it to the pure-jnp
+oracle (same math, unfused HLO), mirroring every other op in the registry.
 """
 from __future__ import annotations
 
@@ -10,12 +15,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-
-def _pairwise_sqdist(x: jax.Array, c: jax.Array) -> jax.Array:
-    """(n, d) x (k, d) -> (n, k) squared euclidean distances."""
-    xx = jnp.sum(x * x, axis=1)[:, None]
-    cc = jnp.sum(c * c, axis=1)[None, :]
-    return jnp.maximum(xx + cc - 2.0 * (x @ c.T), 0.0)
+from ..kernels import ops
 
 
 def kmeans_plus_plus_init(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
@@ -40,21 +40,42 @@ def kmeans_plus_plus_init(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
     return cents
 
 
-@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def _canonicalize(labels: jax.Array, cents: jax.Array, k: int):
+    """Relabel clusters in order of first appearance (point 0's cluster
+    becomes id 0, the next unseen cluster id 1, ...). Cluster ids then
+    depend only on the PARTITION, not on the kmeans++ sampling order — so
+    two runs whose embeddings differ by reduction-order noise (e.g. the
+    sharded vs single-device engines) produce bitwise-identical labels
+    whenever they produce the same clustering. Centroids are permuted to
+    match. Empty clusters sort last (stable)."""
+    n = labels.shape[0]
+    first = jnp.min(
+        jnp.where(labels[None, :] == jnp.arange(k)[:, None],
+                  jnp.arange(n)[None, :], n),
+        axis=1)                                   # (k,) first index per id
+    order = jnp.argsort(first)                    # old ids by first appearance
+    rank = jnp.argsort(order)                     # old id -> canonical id
+    return rank[labels].astype(jnp.int32), cents[order]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "force_reference"))
 def kmeans(
-    key: jax.Array, x: jax.Array, k: int, iters: int = 25
+    key: jax.Array, x: jax.Array, k: int, iters: int = 25,
+    force_reference: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Lloyd's algorithm. Returns (labels (n,), centroids (k, d)).
 
     Empty clusters keep their previous centroid (standard fix; keeps the
-    update well-defined under jit).
+    update well-defined under jit). The assignment step runs the fused
+    Pallas kernel unless ``force_reference`` routes it to the jnp oracle.
+    Labels are canonicalized by first appearance (see ``_canonicalize``).
     """
     x = x.astype(jnp.float32)
     cents = kmeans_plus_plus_init(key, x, k)
 
     def step(cents, _):
-        d2 = _pairwise_sqdist(x, cents)
-        assign = jnp.argmin(d2, axis=1)
+        assign, _d2 = ops.kmeans_assign(x, cents,
+                                        force_reference=force_reference)
         onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)      # (n, k)
         counts = jnp.sum(onehot, axis=0)                        # (k,)
         sums = onehot.T @ x                                     # (k, d)
@@ -64,8 +85,8 @@ def kmeans(
         return new, None
 
     cents, _ = jax.lax.scan(step, cents, None, length=iters)
-    labels = jnp.argmin(_pairwise_sqdist(x, cents), axis=1).astype(jnp.int32)
-    return labels, cents
+    labels, _ = ops.kmeans_assign(x, cents, force_reference=force_reference)
+    return _canonicalize(labels, cents, k)
 
 
 def kmeans_objective(x: jax.Array, labels: jax.Array, cents: jax.Array) -> jax.Array:

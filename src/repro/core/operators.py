@@ -1,0 +1,265 @@
+"""PowerOperator builders — every GPIC scenario as one engine binding.
+
+The convergence engine (core/power.py) is parameterized by a
+:class:`~repro.core.power.PowerOperator`; this module is the ONLY place
+operators are assembled (DESIGN.md §9). Local builders bind the reduction
+primitives to jnp identities; sharded builders (called INSIDE a
+``shard_map`` body) bind them to ``psum``/``pmax``/``all_gather`` over the
+mesh axes and realize the sweep with the exact same `(op, mode)` kernel
+dispatch (kernels/ops.py) the single-device path uses — bf16 A storage,
+autotuned tiles, streamed tile regeneration and all.
+
+Operator menu (entry points in core/gpic.py, core/pic.py,
+core/distributed.py, front door in core/pipeline.py):
+
+  explicit_operator            square Pallas A build + fused mat-mat sweeps
+  streaming_operator           A-free: tiles regenerated inside each sweep
+  matrix_free_operator         factored jnp product (cosine kinds, O2)
+  sharded_explicit_operator    per-device (n/P, n) stripe of the SAME
+                               Pallas build; V replicated per sweep
+  sharded_matrix_free_operator X̂ row-sharded; O(m r) collectives per sweep
+  sharded_streaming_operator   row-striped features, ring-rotated col
+                               blocks (ppermute): O(n·m/P) peak memory per
+                               device AND all affinity kinds — the
+                               production configuration
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .affinity import AffinityKind, matmat_matrix_free, row_normalize_features
+from .power import PowerOperator
+
+
+def _axis_tuple(axes) -> tuple[str, ...]:
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def mesh_reductions(axes):
+    """(sum, max, all_gather) bound to collectives over the mesh axes."""
+    axes = _axis_tuple(axes)
+    return (
+        lambda x: jax.lax.psum(x, axes),
+        lambda x: jax.lax.pmax(x, axes),
+        lambda x: jax.lax.all_gather(x, axes, axis=0, tiled=True),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Local operators (single device / single chunk)
+# ---------------------------------------------------------------------------
+
+
+def explicit_operator(inp, *, kind: AffinityKind = "cosine_shifted",
+                      sigma: float = 1.0, a_dtype=jnp.float32,
+                      tile: int | None = None,
+                      use_pallas: bool = True) -> PowerOperator:
+    """Paper-faithful: build A once (optionally bf16-stored, O4), then
+    fused degree-normalized mat-mat sweeps. ``inp`` is row-normalized
+    features for the cosine kinds, raw features for rbf."""
+    a, d = ops.affinity_and_degree(
+        inp, kind=kind, sigma=sigma, tm=tile, tn=tile,
+        out_dtype=a_dtype, force_reference=not use_pallas,
+    )
+
+    def matmat(v):
+        return ops.degree_normalized_matmat(
+            a, v, d, tm=tile, tn=tile, force_reference=not use_pallas)
+
+    return PowerOperator(matmat=matmat, degree=d)
+
+
+def streaming_operator(inp, *, kind: AffinityKind = "cosine_shifted",
+                       sigma: float = 1.0, tile: int | None = None,
+                       use_pallas: bool = True) -> PowerOperator:
+    """A-free: affinity tiles are regenerated from the feature slabs inside
+    every power step (DESIGN.md §5). All kinds incl. rbf; peak memory
+    O(n m + n r), no (n, n) allocation ever."""
+    d = ops.streaming_degree(
+        inp, kind=kind, sigma=sigma, tm=tile, tn=tile,
+        force_reference=not use_pallas,
+    )
+
+    def matmat(v):
+        return ops.streaming_matmat(
+            inp, v, d, kind=kind, sigma=sigma, tm=tile, tn=tile,
+            force_reference=not use_pallas,
+        )
+
+    return PowerOperator(matmat=matmat, degree=d)
+
+
+def matrix_free_operator(xn, *, kind: AffinityKind = "cosine_shifted"
+                         ) -> PowerOperator:
+    """Factored jnp product A V = f(X̂(X̂ᵀV)) − V (O2): O(n·m·r) per sweep,
+    cosine kinds only. ``xn`` must be row-normalized."""
+    n = xn.shape[0]
+    d = matmat_matrix_free(xn, jnp.ones((n,), xn.dtype), kind)
+
+    def matmat(v):
+        return matmat_matrix_free(xn, v, kind) / jnp.maximum(
+            d, 1e-30)[:, None]
+
+    return PowerOperator(matmat=matmat, degree=d)
+
+
+# ---------------------------------------------------------------------------
+# Sharded operators (call INSIDE a shard_map body; x_loc is the device's
+# row block of the global (n, m) feature matrix)
+# ---------------------------------------------------------------------------
+
+
+def sharded_explicit_operator(x_loc, *, axes, kind: AffinityKind,
+                              sigma: float = 1.0, a_dtype=jnp.float32,
+                              fold_shift: bool = False,
+                              tile: int | None = None,
+                              use_pallas: bool = True) -> PowerOperator:
+    """Per-device (n/P, n) stripe of the Pallas affinity build; V is
+    replicated per sweep via all-gather (O(n r) bytes/step against
+    O(n²/P) local compute — collective-light).
+
+    ``fold_shift`` (O5, cosine_shifted only) stores the stripe as RAW
+    masked cosine (the (1+a)/2 transform never touches the O(n²/P) array)
+    and folds the shift into an O(n_loc r) epilogue:
+    (A V)_i = (ΣV − v_i + (A_cos V)_i)/2, d_i = (n − 1 + d_cos,i)/2.
+    """
+    psum, pmax, gather = mesh_reductions(axes)
+    idx = jax.lax.axis_index(_axis_tuple(axes))
+    n_loc = x_loc.shape[0]
+    row0 = idx * n_loc
+    if kind != "rbf":
+        x_loc = row_normalize_features(x_loc)
+    x_full = gather(x_loc)
+    n = x_full.shape[0]
+
+    fold = fold_shift and kind == "cosine_shifted"
+    build_kind = "cosine" if fold else kind
+    a_loc, d_raw = ops.affinity_and_degree(
+        x_loc, x_full, kind=build_kind, sigma=sigma, tm=tile, tn=tile,
+        out_dtype=a_dtype, row_offset=row0, force_reference=not use_pallas,
+    )
+
+    if fold:
+        d_loc = 0.5 * (n - 1.0 + d_raw)
+        ones = jnp.ones((n_loc,), jnp.float32)
+
+        def matmat(v_loc):
+            v_full = gather(v_loc)
+            raw = ops.degree_normalized_matmat(     # (A_cos V) stripe, d=1
+                a_loc, v_full, ones, tm=tile, tn=tile,
+                force_reference=not use_pallas)
+            sv = jnp.sum(v_full, axis=0)            # (r,) — V is replicated
+            av = 0.5 * (sv[None, :] + raw - v_loc)
+            return av / jnp.maximum(d_loc, 1e-30)[:, None]
+
+    else:
+        d_loc = d_raw
+
+        def matmat(v_loc):
+            v_full = gather(v_loc)
+            return ops.degree_normalized_matmat(
+                a_loc, v_full, d_loc, tm=tile, tn=tile,
+                force_reference=not use_pallas)
+
+    return PowerOperator(matmat=matmat, degree=d_loc,
+                         sum=psum, max=pmax, all_gather=gather)
+
+
+def sharded_matrix_free_operator(x_loc, *, axes,
+                                 kind: AffinityKind = "cosine_shifted"
+                                 ) -> PowerOperator:
+    """X̂ row-sharded factored product: per sweep one psum of an (m, r)
+    block and one (r,) psum — O(m r) collectives, the configuration that
+    scales to thousands of nodes. Cosine kinds only (they factor)."""
+    psum, pmax, gather = mesh_reductions(axes)
+    n_loc = x_loc.shape[0]
+    xn_loc = row_normalize_features(x_loc)
+    d_loc = matmat_matrix_free(
+        xn_loc, jnp.ones((n_loc,), xn_loc.dtype), kind, psum=psum)
+
+    def matmat(v_loc):
+        av = matmat_matrix_free(xn_loc, v_loc, kind, psum=psum)
+        return av / jnp.maximum(d_loc, 1e-30)[:, None]
+
+    return PowerOperator(matmat=matmat, degree=d_loc,
+                         sum=psum, max=pmax, all_gather=gather)
+
+
+def sharded_streaming_operator(x_loc, *, axes, mesh_size: int,
+                               kind: AffinityKind = "cosine_shifted",
+                               sigma: float = 1.0, tile: int | None = None,
+                               use_pallas: bool = True) -> PowerOperator:
+    """Row-striped A-free engine: each sweep ring-rotates the (n/P, m)
+    feature blocks (and the matching V blocks) around the mesh with
+    ``ppermute``; every stage regenerates the (n/P, n/P) affinity stripe
+    tiles on the fly and accumulates the partial product. Features are
+    never gathered: peak per-device memory is O(n·m/P + n·r/P) — and the
+    tile transform is elementwise, so EVERY affinity kind works (rbf
+    included). This is the production configuration: the only one that is
+    simultaneously A-free, fully sharded, and all-kinds (DESIGN.md §9).
+
+    ``mesh_size`` is the static number of devices P spanned by ``axes``
+    (ring length). Collectives per sweep: 2(P−1) ppermutes (the feature
+    ring and the V ring rotate independently at each of the P−1 rotated
+    stages), moving O(n(m+r)/P) bytes each — O(n(m+r)) total per device,
+    the all-gather equivalent, but with O(n m / P) residency instead of
+    O(n m).
+    """
+    psum, pmax, gather = mesh_reductions(axes)
+    axes_t = _axis_tuple(axes)
+    idx = jax.lax.axis_index(axes_t)
+    n_loc = x_loc.shape[0]
+    row0 = idx * n_loc
+    if kind != "rbf":
+        x_loc = row_normalize_features(x_loc)
+    perm = [(i, (i - 1) % mesh_size) for i in range(mesh_size)]
+
+    def ring(x):
+        return jax.lax.ppermute(x, axes_t, perm)
+
+    def _col0(s):
+        return ((idx + s) % mesh_size) * n_loc
+
+    # the last stage's block is consumed in place — rotating it again would
+    # be a pure-waste collective, so both sweeps run P-1 rotated stages in
+    # the fori_loop and apply stage P-1 outside it
+
+    def degree_sweep():
+        def stage(s, carry):
+            d, x_ring = carry
+            d = d + ops.streaming_degree(
+                x_loc, x_ring, kind=kind, sigma=sigma, tm=tile, tn=tile,
+                row_offset=row0, col_offset=_col0(s),
+                force_reference=not use_pallas)
+            return d, ring(x_ring)
+        d, x_ring = jax.lax.fori_loop(
+            0, mesh_size - 1, stage,
+            (jnp.zeros((n_loc,), jnp.float32), x_loc))
+        return d + ops.streaming_degree(
+            x_loc, x_ring, kind=kind, sigma=sigma, tm=tile, tn=tile,
+            row_offset=row0, col_offset=_col0(mesh_size - 1),
+            force_reference=not use_pallas)
+
+    d_loc = degree_sweep()
+
+    def matmat(v_loc):
+        def partial(s, x_ring, v_ring):
+            return ops.streaming_matmat(
+                x_loc, v_ring, None, x_ring, kind=kind, sigma=sigma,
+                tm=tile, tn=tile, row_offset=row0, col_offset=_col0(s),
+                force_reference=not use_pallas)
+
+        def stage(s, carry):
+            u, x_ring, v_ring = carry
+            u = u + partial(s, x_ring, v_ring)
+            return u, ring(x_ring), ring(v_ring)
+        u0 = jnp.zeros((n_loc, v_loc.shape[1]), jnp.float32)
+        u, x_ring, v_ring = jax.lax.fori_loop(
+            0, mesh_size - 1, stage, (u0, x_loc, v_loc.astype(jnp.float32)))
+        u = u + partial(mesh_size - 1, x_ring, v_ring)
+        return u / jnp.maximum(d_loc, 1e-30)[:, None]
+
+    return PowerOperator(matmat=matmat, degree=d_loc,
+                         sum=psum, max=pmax, all_gather=gather)

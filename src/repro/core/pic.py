@@ -33,9 +33,23 @@ from .power import (
 @dataclass(frozen=True)
 class PICResult:
     labels: jax.Array      # (n,) int32 cluster assignment
-    embedding: jax.Array   # (n,) final power-iteration vector v_t
-    n_iter: jax.Array      # iterations actually executed
+    embedding: jax.Array   # (n,) final power-iteration vector v_t (column 0)
+    n_iter: jax.Array      # iterations actually executed (column 0)
     converged: jax.Array   # bool — stopped by the epsilon rule (vs max_iter)
+    embeddings: jax.Array      # (n, r) full multi-vector embedding
+    n_iter_cols: jax.Array     # (r,) int32 per-column iteration counts
+    converged_cols: jax.Array  # (r,) bool per-column convergence flags
+
+
+def make_pic_result(labels, v, t_cols, done) -> PICResult:
+    """Assemble a PICResult from the engine outputs: labels (n,), the final
+    (n, r) state, and the per-column (r,) iteration counts / flags. Column 0
+    (the paper's degree-seeded vector) backs the scalar back-compat fields;
+    the full state rides along so multi-vector callers stop re-deriving it."""
+    return PICResult(
+        labels=labels, embedding=v[:, 0], n_iter=t_cols[0], converged=done[0],
+        embeddings=v, n_iter_cols=t_cols, converged_cols=done,
+    )
 
 
 def _power_iterate(
@@ -124,8 +138,7 @@ def pic_from_affinity(
         lambda vv: w @ vv, v0, eps, max_iter)
     emb = standardize_columns(v)
     labels, _cent = kmeans(kkm, emb, k, iters=kmeans_iters)
-    return PICResult(labels=labels, embedding=v[:, 0], n_iter=t_cols[0],
-                     converged=done[0])
+    return make_pic_result(labels, v, t_cols, done)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,162 @@
+"""The GPIC front door: one config dataclass, one entry point.
+
+Every scenario the repo supports — local or sharded, explicit / streaming /
+matrix-free, any affinity kind, any number of power vectors — is a field
+combination on :class:`GPICConfig`; :func:`run_gpic` routes it to the right
+operator-backed entry point. Examples, benchmarks, and launch/ call this
+instead of hand-assembling keyword lists against five functions.
+
+    from repro.core import GPICConfig, run_gpic
+
+    # single device, paper-faithful
+    res = run_gpic(x, k=4, config=GPICConfig(affinity_kind="rbf", sigma=0.3))
+
+    # production config: sharded A-free streaming on a mesh
+    cfg = GPICConfig(engine="streaming", mesh=mesh, shard_axes="data",
+                     affinity_kind="rbf", sigma=0.3, n_vectors=4)
+    res = run_gpic(shard_points(x, mesh), k=4, config=cfg)
+
+Routing table (operator names from core/operators.py):
+
+    mesh   engine        entry point                    operator
+    ------ ------------- ------------------------------ ---------------------------
+    None   explicit      gpic(engine='explicit')        explicit_operator
+    None   streaming     gpic(engine='streaming')       streaming_operator
+    None   matrix_free   gpic_matrix_free               matrix_free_operator
+    set    explicit      distributed_gpic               sharded_explicit_operator
+    set    streaming     distributed_gpic('streaming')  sharded_streaming_operator
+    set    matrix_free   distributed_gpic_matrix_free   sharded_matrix_free_operator
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from .affinity import AffinityKind
+from .distributed import distributed_gpic, distributed_gpic_matrix_free
+from .gpic import gpic, gpic_matrix_free
+from .pic import PICResult
+
+ENGINES = ("explicit", "streaming", "matrix_free")
+
+
+@dataclass(frozen=True)
+class GPICConfig:
+    """Everything that selects and tunes a GPIC run, in one hashable value.
+
+    Engine / placement:
+      engine:       'explicit' (paper-faithful A build), 'streaming'
+                    (A-free tile regeneration), or 'matrix_free' (factored
+                    jnp product, cosine kinds only).
+      mesh:         None → single device; a Mesh → sharded via shard_map
+                    (pass row-sharded x, e.g. from ``shard_points``).
+      shard_axes:   mesh axis name(s) the rows stripe over.
+
+    Clustering:
+      affinity_kind/sigma: similarity (sigma only read for 'rbf').
+      n_vectors:    r power vectors in one engine state (O3).
+      eps_scale:    convergence threshold numerator (eps = eps_scale / n).
+      max_iter / kmeans_iters: loop caps.
+
+    Performance:
+      a_dtype:      A-stripe storage dtype ('explicit' engines; bf16 = O4).
+      fold_shift:   O5 — fold the cosine_shifted transform out of the
+                    O(n²/P) build (sharded explicit engine only).
+      tile:         Pallas tile edge override (None = static autotuner).
+      use_pallas:   False routes every op to the jnp reference oracles.
+      seed:         key for k-means init + extra power vectors when
+                    ``run_gpic`` isn't handed an explicit key.
+    """
+    engine: str = "explicit"
+    mesh: Mesh | None = None
+    shard_axes: str | Sequence[str] = "data"
+    affinity_kind: AffinityKind = "cosine_shifted"
+    sigma: float = 1.0
+    n_vectors: int = 1
+    eps_scale: float = 1e-5
+    max_iter: int = 50
+    kmeans_iters: int = 25
+    a_dtype: Any = jnp.float32
+    fold_shift: bool = False
+    tile: int | None = None
+    use_pallas: bool = True
+    seed: int = 0
+
+    def with_(self, **updates) -> "GPICConfig":
+        """Functional update (``dataclasses.replace`` with a shorter name)."""
+        return replace(self, **updates)
+
+
+def run_gpic(
+    x: jax.Array,
+    k: int,
+    config: GPICConfig | None = None,
+    *,
+    key: jax.Array | None = None,
+    **overrides,
+) -> PICResult:
+    """Run GPIC as described by ``config`` (plus keyword overrides).
+
+    ``x`` is the (n, m) feature matrix — row-sharded on ``config.mesh``
+    for distributed runs (see ``shard_points``), a plain array otherwise.
+    Returns the extended :class:`PICResult` (full (n, r) embedding and
+    per-column iteration stats included).
+    """
+    cfg = config or GPICConfig()
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    if cfg.engine not in ENGINES:
+        raise ValueError(
+            f"unknown engine {cfg.engine!r} (expected one of {ENGINES})")
+    # reject field combinations the selected route would silently ignore —
+    # the front door must not mask misconfiguration a direct call rejects
+    if cfg.engine == "matrix_free":
+        dropped = [name for name, bad in (
+            ("fold_shift", cfg.fold_shift),
+            ("tile", cfg.tile is not None),
+            ("a_dtype", cfg.a_dtype != jnp.float32),
+        ) if bad]
+        if dropped:
+            raise ValueError(
+                f"engine='matrix_free' does not use {dropped} (the factored "
+                "jnp sweep has no A storage or Pallas tiles)")
+    elif cfg.fold_shift and (cfg.mesh is None or cfg.engine != "explicit"
+                             or cfg.affinity_kind != "cosine_shifted"):
+        raise ValueError(
+            "fold_shift (O5) applies only to the sharded explicit engine "
+            "with affinity_kind='cosine_shifted' (the shift being folded)")
+    if cfg.engine == "streaming" and cfg.a_dtype != jnp.float32:
+        raise ValueError(
+            "a_dtype (O4) selects the A *storage* dtype; the streaming "
+            "engine never stores A")
+    if key is None:
+        key = jax.random.key(cfg.seed)
+
+    common = dict(key=key, max_iter=cfg.max_iter,
+                  kmeans_iters=cfg.kmeans_iters,
+                  affinity_kind=cfg.affinity_kind, n_vectors=cfg.n_vectors)
+
+    if cfg.mesh is None:
+        if cfg.engine == "matrix_free":
+            return gpic_matrix_free(x, k, eps=cfg.eps_scale / x.shape[0],
+                                    use_pallas=cfg.use_pallas, **common)
+        return gpic(
+            x, k, engine=cfg.engine, sigma=cfg.sigma, a_dtype=cfg.a_dtype,
+            tile=cfg.tile, use_pallas=cfg.use_pallas,
+            eps=cfg.eps_scale / x.shape[0], **common)
+
+    shard_axes = (cfg.shard_axes if isinstance(cfg.shard_axes, str)
+                  else tuple(cfg.shard_axes))
+    if cfg.engine == "matrix_free":
+        return distributed_gpic_matrix_free(
+            x, k, mesh=cfg.mesh, shard_axes=shard_axes,
+            eps_scale=cfg.eps_scale, use_pallas=cfg.use_pallas, **common)
+    return distributed_gpic(
+        x, k, mesh=cfg.mesh, shard_axes=shard_axes, engine=cfg.engine,
+        eps_scale=cfg.eps_scale, sigma=cfg.sigma, a_dtype=cfg.a_dtype,
+        fold_shift=cfg.fold_shift, tile=cfg.tile, use_pallas=cfg.use_pallas,
+        **common)

@@ -6,6 +6,14 @@ it is realized — explicit Pallas tiles, streamed tiles, or the factored
 matrix-free product), so the per-iteration HBM traffic is independent of
 the number of power vectors (DESIGN.md §4).
 
+The engine is parameterized by a :class:`PowerOperator` (DESIGN.md §9):
+``matmat`` performs the one sweep on the caller's *local* row chunk of the
+state, and the ``sum``/``max``/``all_gather`` reduction primitives finish
+the cross-chunk combines. Bound to plain jnp identities the engine IS the
+single-device loop; bound to ``psum``/``pmax``/``all_gather`` over mesh
+axes inside ``shard_map`` the SAME loop is the sharded one — there is no
+second implementation of the convergence math anywhere in the repo.
+
 Column semantics are EXACTLY the paper's per-vector Algorithm 1/2 loop
 (lines 6-15): each column carries its own delta and acceleration-based
 stopping flag, and a converged column is frozen (its value and delta stop
@@ -15,23 +23,66 @@ produced — the batching changes the cost model, not the math.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass, field
+from typing import Callable
+
 import jax
 import jax.numpy as jnp
 
 
-def batched_power_iteration(matmat_over_degree, v0, eps, max_iter):
+def _identity(x):
+    return x
+
+
+@dataclass(frozen=True)
+class PowerOperator:
+    """One degree-normalized sweep of A plus its reduction binding.
+
+    Attributes:
+      matmat: maps the local (n_loc, r) chunk of V to the local chunk of
+        (A V) / d — ONE sweep of A however realized. Any gathering the
+        realization needs (e.g. replicating V across a mesh before a
+        stripe mat-mat) happens inside.
+      degree: the local (n_loc,) degree chunk backing the sweep (v0 seed
+        and diagnostics; None for bare-callable wrapping).
+      sum: finishes a cross-chunk sum of an already-locally-reduced value
+        (identity locally; ``psum`` over mesh axes when sharded).
+      max: same for max (identity / ``pmax``).
+      all_gather: maps a local (n_loc, ...) chunk to the global (n, ...)
+        array (identity locally; tiled ``all_gather`` when sharded).
+    """
+    matmat: Callable[[jax.Array], jax.Array]
+    degree: jax.Array | None = None
+    sum: Callable[[jax.Array], jax.Array] = field(default=_identity)
+    max: Callable[[jax.Array], jax.Array] = field(default=_identity)
+    all_gather: Callable[[jax.Array], jax.Array] = field(default=_identity)
+
+
+def as_operator(op) -> PowerOperator:
+    """Wrap a bare ``matmat`` callable as a local (single-chunk) operator."""
+    if isinstance(op, PowerOperator):
+        return op
+    return PowerOperator(matmat=op)
+
+
+def batched_power_iteration(op, v0, eps, max_iter):
     """Run the truncated power iteration on batched state.
 
     Args:
-      matmat_over_degree: maps V (n, r) -> (A V) / d, one sweep of A.
-      v0: (n, r) initial vectors (columns).
+      op: a :class:`PowerOperator`, or a bare callable mapping V (n, r) to
+        (A V) / d (wrapped as a local operator).
+      v0: (n_loc, r) initial vectors — the caller's local row chunk of the
+        global (n, r) state (the whole state on a single device).
       eps: the paper's acceleration threshold (typically 1e-5 / n).
       max_iter: iteration cap.
 
     Returns:
-      (V, t_cols, done): final (n, r) state, per-column iteration counts
-      (r,) int32, and per-column convergence flags (r,) bool.
+      (V, t_cols, done): final local (n_loc, r) state, per-column iteration
+      counts (r,) int32, and per-column convergence flags (r,) bool. The
+      counts/flags are replicated across chunks; gather V with
+      ``op.all_gather`` if the full embedding is needed.
     """
+    op = as_operator(op)
     r = v0.shape[1]
 
     def cond(state):
@@ -40,11 +91,11 @@ def batched_power_iteration(matmat_over_degree, v0, eps, max_iter):
 
     def body(state):
         t, v, delta, done, t_cols = state
-        u = matmat_over_degree(v)                               # (n, r)
-        l1 = jnp.sum(jnp.abs(u), axis=0)                        # (r,)
+        u = op.matmat(v)                                        # (n_loc, r)
+        l1 = op.sum(jnp.sum(jnp.abs(u), axis=0))                # (r,)
         v_next = u / jnp.maximum(l1, 1e-30)[None, :]
         delta_next = jnp.abs(v_next - v)
-        accel = jnp.max(jnp.abs(delta_next - delta), axis=0)    # (r,)
+        accel = op.max(jnp.max(jnp.abs(delta_next - delta), axis=0))  # (r,)
         # columns already done are frozen: keep prior value/delta, don't
         # count the iteration; columns converging NOW keep this update
         # (the per-vector loop applies the converging step before stopping)
@@ -82,6 +133,18 @@ def init_power_vectors(krand, d, n_vectors, dtype=None):
     return jnp.concatenate(
         [v0[:, None], random_start_vectors(krand, d.shape[0], n_vectors, dtype)],
         axis=1)
+
+
+def init_power_vectors_local(d_loc, u0t_loc, sum_fn=_identity, dtype=None):
+    """Local-chunk variant of :func:`init_power_vectors`: column 0 is the
+    degree start normalized by the GLOBAL degree mass (``sum_fn`` finishes
+    the cross-chunk sum — identity locally, ``psum`` when sharded) and the
+    remaining columns are the caller's local slice of the replicated random
+    starts, so every chunk seeds exactly the single-device state."""
+    dtype = dtype or d_loc.dtype
+    dsum = sum_fn(jnp.sum(d_loc))
+    v0 = (d_loc / jnp.maximum(dsum, 1e-30)).astype(dtype)
+    return jnp.concatenate([v0[:, None], u0t_loc.astype(dtype)], axis=1)
 
 
 def standardize_columns(v):

@@ -6,10 +6,20 @@ from .sharding import (
     set_axis_rules,
 )
 
+
+def shard_points(x, mesh, shard_axes="data"):
+    """Row-shard (n, m) host points on the mesh — the GPIC data front door
+    (re-exported from core.distributed; lazy so importing the logical-axis
+    rules never pulls in the clustering pipeline)."""
+    from ..core.distributed import shard_points as _sp
+    return _sp(x, mesh, shard_axes)
+
+
 __all__ = [
     "axis_rules",
     "constrain",
     "current_rules",
     "logical_to_spec",
     "set_axis_rules",
+    "shard_points",
 ]

@@ -1,14 +1,22 @@
 """Pallas TPU kernel: fused affinity-matrix + degree construction.
 
 TPU adaptation of the paper's ``AffinityMatrix`` + ``RowSum`` CUDA kernels
-(DESIGN.md §2). One HBM sweep produces both the (n, n) affinity tile grid and
-the degree vector D — the paper's separate RowSum kernel (an extra O(n²) read)
+(DESIGN.md §2). One HBM sweep produces both the affinity tile grid and the
+degree vector D — the paper's separate RowSum kernel (an extra O(n²) read)
 is fused into the tile epilogue (optimization O1a).
 
-Grid: (n/TM, n/TN); each step loads a (TM, m) row-slab and a (TN, m) col-slab
-of the (row-normalized) input into VMEM, runs the (TM, m)·(m, TN) product on
-the MXU, applies the similarity transform on the VPU, masks the diagonal /
-padding, writes the A tile, and accumulates the partial row-sums into D.
+The kernel computes a general *stripe* A[row_offset:row_offset+R,
+col_offset:col_offset+C] from a (R, m) row-feature slab and a (C, m)
+col-feature slab (DESIGN.md §9): the single-device build is the square
+self-stripe (xc = xn, offsets 0), and the sharded explicit path calls the
+SAME kernel on its local row block against the gathered feature matrix.
+The global offsets drive the diagonal mask and arrive as traced scalars in
+SMEM, so one compiled program serves every shard position.
+
+Grid: (R/TM, C/TN); each step loads a (TM, m) row-slab and a (TN, m)
+col-slab into VMEM, runs the (TM, m)·(m, TN) product on the MXU, applies
+the similarity transform on the VPU, masks the diagonal / padding, writes
+the A tile, and accumulates the partial row-sums into D.
 
 Tile sizes default to 256×256 (512 KiB f32 per A tile — comfortably inside
 a ~16 MiB VMEM budget together with the two input slabs).
@@ -20,14 +28,15 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-
-from .tuning import round_up_to_lcm
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _affinity_kernel(
+    off_ref,                           # (1, 2) SMEM: global row/col offsets
     xr_ref, xc_ref, sqr_ref, sqc_ref,  # inputs
     a_ref, d_ref,                      # outputs
-    *, kind: str, n: int, tm: int, tn: int, inv_two_sigma_sq: float,
+    *, kind: str, n_rows: int, n_cols: int, tm: int, tn: int,
+    inv_two_sigma_sq: float,
 ):
     i = pl.program_id(0)
     j = pl.program_id(1)
@@ -48,10 +57,13 @@ def _affinity_kernel(
     else:
         raise ValueError(kind)
 
-    # global row/col ids for diagonal + padding masks
-    rows = i * tm + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 0)
-    cols = j * tn + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 1)
-    valid = (rows != cols) & (rows < n) & (cols < n)
+    # local row/col ids for the padding masks; global ids (local + the
+    # stripe offsets) for the diagonal mask
+    lrows = i * tm + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 0)
+    lcols = j * tn + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 1)
+    grows = off_ref[0, 0] + lrows
+    gcols = off_ref[0, 1] + lcols
+    valid = (grows != gcols) & (lrows < n_rows) & (lcols < n_cols)
     a = jnp.where(valid, a, 0.0)
 
     a_ref[...] = a.astype(a_ref.dtype)
@@ -73,6 +85,7 @@ def _affinity_kernel(
 )
 def affinity_and_degree(
     xn: jax.Array,
+    xc: jax.Array | None = None,
     *,
     kind: str = "cosine_shifted",
     sigma: float = 1.0,
@@ -80,29 +93,44 @@ def affinity_and_degree(
     tn: int = 256,
     interpret: bool = False,
     out_dtype=jnp.float32,
+    row_offset: jax.Array | int = 0,
+    col_offset: jax.Array | int = 0,
 ) -> tuple[jax.Array, jax.Array]:
-    """Returns (A (n, n), D (n,)) from pre-normalized features ``xn`` (n, m).
+    """Returns (A (R, C), D (R,)) for the affinity stripe of ``xn`` vs ``xc``.
+
+    ``xc=None`` is the square self-affinity (the paper's build): A is
+    (n, n) and D its row sums. With ``xc`` given, A is the
+    ``A[row_offset:row_offset+R, col_offset:col_offset+C]`` stripe of the
+    global matrix and D its stripe row sums; the offsets (traced scalars
+    are fine — they ride in SMEM) locate the global diagonal to mask.
 
     For ``kind='rbf'`` pass the *raw* features and a bandwidth ``sigma``;
     for the cosine kinds pass L2-row-normalized features.
     """
-    n, m = xn.shape
-    n_pad = round_up_to_lcm(n, tm, tn)  # both grid dims must divide evenly
-    if n_pad != n:
-        xn = jnp.pad(xn, ((0, n_pad - n), (0, 0)))
-    x32 = xn.astype(jnp.float32)
-    sq = jnp.sum(x32 * x32, axis=1, keepdims=True)       # (n_pad, 1)
+    if xc is None:
+        xc = xn
+    n_rows, m = xn.shape
+    n_cols = xc.shape[0]
+    rp = pl.cdiv(n_rows, tm) * tm
+    cp = pl.cdiv(n_cols, tn) * tn
+    xr32 = jnp.pad(xn.astype(jnp.float32), ((0, rp - n_rows), (0, 0)))
+    xc32 = jnp.pad(xc.astype(jnp.float32), ((0, cp - n_cols), (0, 0)))
+    sqr = jnp.sum(xr32 * xr32, axis=1, keepdims=True)    # (rp, 1)
+    sqc = jnp.sum(xc32 * xc32, axis=1, keepdims=True)    # (cp, 1)
+    off = jnp.array([row_offset, col_offset], jnp.int32).reshape(1, 2)
 
-    grid = (n_pad // tm, n_pad // tn)
+    grid = (rp // tm, cp // tn)
     kernel = functools.partial(
         _affinity_kernel,
-        kind=kind, n=n, tm=tm, tn=tn,
+        kind=kind, n_rows=n_rows, n_cols=n_cols, tm=tm, tn=tn,
         inv_two_sigma_sq=float(1.0 / (2.0 * sigma * sigma)),
     )
     a, d = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),        # global offsets
             pl.BlockSpec((tm, m), lambda i, j: (i, 0)),   # row slab
             pl.BlockSpec((tn, m), lambda i, j: (j, 0)),   # col slab
             pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),   # row sq-norms
@@ -113,9 +141,9 @@ def affinity_and_degree(
             pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),   # degree (acc over j)
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n_pad, n_pad), out_dtype),
-            jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((rp, cp), out_dtype),
+            jax.ShapeDtypeStruct((rp, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(x32, x32, sq, sq)
-    return a[:n, :n], d[:n, 0]
+    )(off, xr32, xc32, sqr, sqc)
+    return a[:n_rows, :n_cols], d[:n_rows, 0]

@@ -100,6 +100,17 @@ def _resolve_mode(mode: str | None, force_reference: bool,
 
 def _tiles(n: int, tm: int | None, tn: int | None, *, r: int = 1,
            m: int = 0, a_bytes: int = 4) -> tuple[int, int]:
+    """Resolve (tm, tn): explicit overrides win, else the static autotuner
+    keyed on the wide dimension ``n``. Rectangular stripe sweeps
+    deliberately use the SAME tile choice as the square build (not one
+    shrunk to the stripe height): distributed-vs-single-device trajectory
+    parity rests on the two paths compiling the same tiled program, and
+    in interpret mode even a row-only tile change perturbs XLA fusion and
+    hence f32 rounding. The cost — padding a short (n/P) row block up to
+    the square-build tile — is a TPU-tuning follow-up (see ROADMAP).
+    Exception: the streaming ring's stages are (n/P, n/P) blocks, so their
+    ``n`` IS the block size — ring tiling intentionally differs from the
+    single-device streaming sweep (ulp-level parity; DESIGN.md §9)."""
     if tm is not None and tn is not None:
         return tm, tn
     atm, atn = choose_tiles(n, r=r, m=m, a_bytes=a_bytes)
@@ -130,18 +141,28 @@ register("kmeans_assign", "reference")(ref.kmeans_assign_ref)
 # ---------------------------------------------------------------------------
 
 
-def affinity_and_degree(xn, *, kind="cosine_shifted", sigma=1.0,
+def affinity_and_degree(xn, xc=None, *, kind="cosine_shifted", sigma=1.0,
                         tm=None, tn=None, out_dtype=jnp.float32,
+                        row_offset=0, col_offset=0,
                         force_reference=False, mode=None):
-    """Fused A + D build (paper kernels 1-2). See kernels/affinity.py."""
+    """Fused A + D build (paper kernels 1-2). See kernels/affinity.py.
+
+    ``xc=None`` is the square self-affinity; with ``xc`` given the result
+    is the (R, C) stripe at (row_offset, col_offset) of the global matrix
+    — the sharded explicit path's per-device build (DESIGN.md §9).
+    """
     mode = _resolve_mode(mode, force_reference)
     if mode == "reference":
-        a, deg = ref.affinity_and_degree_ref(xn, kind=kind, sigma=sigma)
+        a, deg = ref.affinity_and_degree_ref(
+            xn, xc, kind=kind, sigma=sigma,
+            row_offset=row_offset, col_offset=col_offset)
         return a.astype(out_dtype), deg   # honor O4 storage dtype here too
-    tm, tn = _tiles(xn.shape[0], tm, tn, m=xn.shape[1],
+    n = max(xn.shape[0], xn.shape[0] if xc is None else xc.shape[0])
+    tm, tn = _tiles(n, tm, tn, m=xn.shape[1],
                     a_bytes=jnp.dtype(out_dtype).itemsize)
     return dispatch("affinity_and_degree", mode)(
-        xn, kind=kind, sigma=sigma, tm=tm, tn=tn, out_dtype=out_dtype,
+        xn, xc, kind=kind, sigma=sigma, tm=tm, tn=tn, out_dtype=out_dtype,
+        row_offset=row_offset, col_offset=col_offset,
         interpret=_interpret(),
     )
 
@@ -160,39 +181,64 @@ def degree_normalized_matvec(a, v, d, *, tm=None, tn=None,
 
 def degree_normalized_matmat(a, v, d, *, tm=None, tn=None,
                              force_reference=False, mode=None):
-    """U = (A V)/d for V (n, r) — ONE HBM sweep of A for all r vectors."""
+    """U = (A V)/d for V (C, r) — ONE HBM sweep of A for all r vectors.
+
+    ``a`` may be a rectangular (R, C) row stripe of the global matrix (the
+    sharded explicit path, DESIGN.md §9); d is the stripe's (R,) degrees.
+    """
     mode = _resolve_mode(mode, force_reference)
     if mode == "reference":
         return ref.degree_normalized_matmat_ref(a, v, d)
-    tm, tn = _tiles(a.shape[0], tm, tn, r=v.shape[1],
+    tm, tn = _tiles(max(a.shape), tm, tn, r=v.shape[1],
                     a_bytes=a.dtype.itemsize)
     return dispatch("degree_normalized_matmat", mode)(
         a, v, d, tm=tm, tn=tn, interpret=_interpret()
     )
 
 
-def streaming_matmat(x, v, d=None, *, kind="cosine_shifted", sigma=1.0,
-                     tm=None, tn=None, force_reference=False, mode=None):
-    """U = (A V)/d with A regenerated on the fly — no (n, n) allocation."""
+def streaming_matmat(x, v, d=None, xc=None, *, kind="cosine_shifted",
+                     sigma=1.0, tm=None, tn=None, row_offset=0, col_offset=0,
+                     force_reference=False, mode=None):
+    """U = (A V)/d with A regenerated on the fly — no (n, n) allocation.
+
+    With ``xc`` given, computes the (R, r) partial product of the stripe
+    at (row_offset, col_offset) against col features xc (C, m) and V
+    (C, r) — one ring stage of the sharded streaming engine. ``d=None``
+    skips the degree normalization so stripe partials can accumulate.
+    """
     mode = _resolve_mode(mode, force_reference, default="streaming")
     if mode == "reference":
-        return ref.affinity_matmat_ref(x, v, d, kind=kind, sigma=sigma)
-    tm, tn = _tiles(x.shape[0], tm, tn, r=v.shape[1], m=x.shape[1])
+        return ref.affinity_matmat_ref(x, v, d, xc, kind=kind, sigma=sigma,
+                                       row_offset=row_offset,
+                                       col_offset=col_offset)
+    n = max(x.shape[0], x.shape[0] if xc is None else xc.shape[0])
+    tm, tn = _tiles(n, tm, tn, r=v.shape[1], m=x.shape[1])
     return dispatch("streaming_matmat", mode)(
-        x, v, d, kind=kind, sigma=sigma, tm=tm, tn=tn,
+        x, v, d, xc, kind=kind, sigma=sigma, tm=tm, tn=tn,
+        row_offset=row_offset, col_offset=col_offset,
         interpret=_interpret(),
     )
 
 
-def streaming_degree(x, *, kind="cosine_shifted", sigma=1.0,
-                     tm=None, tn=None, force_reference=False, mode=None):
-    """Degree vector D = A 1 in one streamed sweep (RowSum without A)."""
+def streaming_degree(x, xc=None, *, kind="cosine_shifted", sigma=1.0,
+                     tm=None, tn=None, row_offset=0, col_offset=0,
+                     force_reference=False, mode=None):
+    """Degree vector D = A 1 in one streamed sweep (RowSum without A).
+
+    With ``xc`` given, returns the partial row sums of the stripe at
+    (row_offset, col_offset) over that column block only.
+    """
     mode = _resolve_mode(mode, force_reference, default="streaming")
     if mode == "reference":
-        return ref.affinity_degree_streaming_ref(x, kind=kind, sigma=sigma)
-    tm, tn = _tiles(x.shape[0], tm, tn, m=x.shape[1])
+        return ref.affinity_degree_streaming_ref(
+            x, xc, kind=kind, sigma=sigma,
+            row_offset=row_offset, col_offset=col_offset)
+    n = max(x.shape[0], x.shape[0] if xc is None else xc.shape[0])
+    tm, tn = _tiles(n, tm, tn, m=x.shape[1])
     return dispatch("streaming_degree", mode)(
-        x, kind=kind, sigma=sigma, tm=tm, tn=tn, interpret=_interpret()
+        x, xc, kind=kind, sigma=sigma, tm=tm, tn=tn,
+        row_offset=row_offset, col_offset=col_offset,
+        interpret=_interpret()
     )
 
 

@@ -19,13 +19,18 @@ outside the kernel (the tiny combine the paper does with its tree-Reduction
 kernel; on TPU this is a trivial jnp.sum — the CUDA interleaved-addressing
 pattern has no TPU analogue, see DESIGN.md §8).
 
+A may be rectangular (R, C): the sharded explicit path (DESIGN.md §9) runs
+this kernel on its local (n/P, n) row stripe against the replicated V — the
+same program the single-device square sweep compiles to, just a shorter
+row grid.
+
 A may be stored in bf16 (O4): tiles are upcast to f32 on load so the MXU
 accumulates in f32 while HBM traffic halves (DESIGN.md §6).
 
-Grid: (n/TM, n/TN), accumulating the product across the col-grid dimension j
+Grid: (R/TM, C/TN), accumulating the product across the col-grid dimension j
 (TPU grid order is sequential, minor-to-major, so revisiting the same output
-block is the idiomatic accumulation pattern). n pads to lcm(TM, TN) so both
-grid dimensions divide evenly for any tile pair.
+block is the idiomatic accumulation pattern). Rows pad to a TM multiple and
+columns to a TN multiple independently, so any tile pair divides evenly.
 """
 from __future__ import annotations
 
@@ -34,8 +39,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-
-from .tuning import round_up_to_lcm
 
 
 def _power_step_kernel(a_ref, v_ref, d_ref, u_ref, *, nj: int):
@@ -74,18 +77,23 @@ def degree_normalized_matmat(
 ) -> jax.Array:
     """U = (A @ V) / d[:, None], one fused HBM sweep of A for all r columns.
 
-    Shapes: a (n, n) [f32 or bf16 storage], v (n, r), d (n,); returns (n, r)
-    f32. The single-vector ``degree_normalized_matvec`` is the r=1 case.
+    Shapes: a (R, C) [f32 or bf16 storage; R == C on the single-device
+    square sweep, R == n/P on a sharded row stripe], v (C, r), d (R,);
+    returns (R, r) f32. The single-vector ``degree_normalized_matvec`` is
+    the r=1 case.
     """
-    n = a.shape[0]
+    n_rows, n_cols = a.shape
     r = v.shape[1]
-    n_pad = round_up_to_lcm(n, tm, tn)
-    if n_pad != n:
-        a = jnp.pad(a, ((0, n_pad - n), (0, n_pad - n)))
-        v = jnp.pad(v, ((0, n_pad - n), (0, 0)))
-        d = jnp.pad(d, (0, n_pad - n), constant_values=1.0)
+    rp = pl.cdiv(n_rows, tm) * tm
+    cp = pl.cdiv(n_cols, tn) * tn
+    if rp != n_rows or cp != n_cols:
+        a = jnp.pad(a, ((0, rp - n_rows), (0, cp - n_cols)))
+    if cp != n_cols:
+        v = jnp.pad(v, ((0, cp - n_cols), (0, 0)))
+    if rp != n_rows:
+        d = jnp.pad(d, (0, rp - n_rows), constant_values=1.0)
 
-    grid = (n_pad // tm, n_pad // tn)
+    grid = (rp // tm, cp // tn)
     u = pl.pallas_call(
         functools.partial(_power_step_kernel, nj=grid[1]),
         grid=grid,
@@ -95,10 +103,10 @@ def degree_normalized_matmat(
             pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
         ],
         out_specs=pl.BlockSpec((tm, r), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_pad, r), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((rp, r), jnp.float32),
         interpret=interpret,
     )(a, v.astype(jnp.float32), d.astype(jnp.float32)[:, None])
-    return u[:n]
+    return u[:n_rows]
 
 
 def degree_normalized_matvec(

@@ -6,22 +6,31 @@ import jax.numpy as jnp
 
 
 def affinity_and_degree_ref(
-    xn: jax.Array, *, kind: str = "cosine_shifted", sigma: float = 1.0
+    xn: jax.Array,
+    xc: jax.Array | None = None,
+    *,
+    kind: str = "cosine_shifted",
+    sigma: float = 1.0,
+    row_offset: jax.Array | int = 0,
+    col_offset: jax.Array | int = 0,
 ) -> tuple[jax.Array, jax.Array]:
-    """Oracle for kernels.affinity.affinity_and_degree."""
+    """Oracle for kernels.affinity.affinity_and_degree (stripe-general)."""
     x = xn.astype(jnp.float32)
-    n = x.shape[0]
+    c = x if xc is None else xc.astype(jnp.float32)
     if kind in ("cosine", "cosine_shifted"):
-        a = x @ x.T
+        a = x @ c.T
         if kind == "cosine_shifted":
             a = 0.5 * (1.0 + a)
     elif kind == "rbf":
-        sq = jnp.sum(x * x, axis=1)
-        d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * (x @ x.T), 0.0)
+        sqr = jnp.sum(x * x, axis=1)
+        sqc = jnp.sum(c * c, axis=1)
+        d2 = jnp.maximum(sqr[:, None] + sqc[None, :] - 2.0 * (x @ c.T), 0.0)
         a = jnp.exp(-d2 / (2.0 * sigma * sigma))
     else:
         raise ValueError(kind)
-    a = a * (1.0 - jnp.eye(n, dtype=a.dtype))
+    grows = row_offset + jnp.arange(a.shape[0])[:, None]
+    gcols = col_offset + jnp.arange(a.shape[1])[None, :]
+    a = jnp.where(grows != gcols, a, 0.0)
     return a, jnp.sum(a, axis=1)
 
 
@@ -45,12 +54,17 @@ def affinity_matmat_ref(
     x: jax.Array,
     v: jax.Array,
     d: jax.Array | None = None,
+    xc: jax.Array | None = None,
     *,
     kind: str = "cosine_shifted",
     sigma: float = 1.0,
+    row_offset: jax.Array | int = 0,
+    col_offset: jax.Array | int = 0,
 ) -> jax.Array:
     """Oracle for kernels.streaming.affinity_matmat: (A @ V) / d, dense A."""
-    a, _ = affinity_and_degree_ref(x, kind=kind, sigma=sigma)
+    a, _ = affinity_and_degree_ref(x, xc, kind=kind, sigma=sigma,
+                                   row_offset=row_offset,
+                                   col_offset=col_offset)
     u = a @ v.astype(jnp.float32)
     if d is None:
         return u
@@ -58,10 +72,18 @@ def affinity_matmat_ref(
 
 
 def affinity_degree_streaming_ref(
-    x: jax.Array, *, kind: str = "cosine_shifted", sigma: float = 1.0
+    x: jax.Array,
+    xc: jax.Array | None = None,
+    *,
+    kind: str = "cosine_shifted",
+    sigma: float = 1.0,
+    row_offset: jax.Array | int = 0,
+    col_offset: jax.Array | int = 0,
 ) -> jax.Array:
     """Oracle for kernels.streaming.affinity_degree_streaming."""
-    _, deg = affinity_and_degree_ref(x, kind=kind, sigma=sigma)
+    _, deg = affinity_and_degree_ref(x, xc, kind=kind, sigma=sigma,
+                                     row_offset=row_offset,
+                                     col_offset=col_offset)
     return deg
 
 

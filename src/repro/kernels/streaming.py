@@ -15,12 +15,23 @@ flops — a bandwidth->compute trade that wins whenever A would spill HBM
 jnp matrix-free path (cosine kinds only, DESIGN.md §2 O2) this works for
 ALL affinity kinds including rbf, because the tile transform is elementwise.
 
+Like the explicit build, the kernels compute a general *stripe*: row
+features ``x`` (R, m) against col features ``xc`` (C, m) with global
+``row_offset``/``col_offset`` locating the diagonal to mask (traced SMEM
+scalars — one compiled program serves every shard position). The sharded
+streaming ring (DESIGN.md §9) calls this once per ring stage with the
+feature block that just arrived over the mesh, so each device's peak
+memory stays O(n·m/P).
+
 Passing d = ones (or ``affinity_matmat(..., d=None)``) turns off the degree
 normalization, which with V = ones((n, 1)) computes the degree vector itself
-in one streamed sweep — the RowSum kernel without the matrix.
+in one streamed sweep — the RowSum kernel without the matrix. ``d=None``
+also leaves the output un-normalized for callers that accumulate partial
+stripes (the ring) and divide once at the end.
 
-Grid: (n/TM, n/TN) with n padded to lcm(TM, TN); accumulation over the
-col-grid dimension j, same revisit pattern as kernels/power_step.py.
+Grid: (R/TM, C/TN) with rows/cols padded to TM/TN multiples independently;
+accumulation over the col-grid dimension j, same revisit pattern as
+kernels/power_step.py.
 """
 from __future__ import annotations
 
@@ -29,14 +40,15 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-
-from .tuning import round_up_to_lcm
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _streaming_kernel(
+    off_ref,                                          # (1, 2) SMEM offsets
     xr_ref, xc_ref, sqr_ref, sqc_ref, v_ref, d_ref,   # inputs
     u_ref,                                            # output
-    *, kind: str, n: int, tm: int, tn: int, inv_two_sigma_sq: float, nj: int,
+    *, kind: str, n_rows: int, n_cols: int, tm: int, tn: int,
+    inv_two_sigma_sq: float, nj: int, normalize: bool,
 ):
     i = pl.program_id(0)
     j = pl.program_id(1)
@@ -57,9 +69,11 @@ def _streaming_kernel(
     else:
         raise ValueError(kind)
 
-    rows = i * tm + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 0)
-    cols = j * tn + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 1)
-    valid = (rows != cols) & (rows < n) & (cols < n)
+    lrows = i * tm + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 0)
+    lcols = j * tn + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 1)
+    grows = off_ref[0, 0] + lrows
+    gcols = off_ref[0, 1] + lcols
+    valid = (grows != gcols) & (lrows < n_rows) & (lcols < n_cols)
     a = jnp.where(valid, a, 0.0)
 
     v = v_ref[...]                     # (TN, r) slice of V
@@ -75,10 +89,11 @@ def _streaming_kernel(
     def _acc():
         u_ref[...] += partial
 
-    @pl.when(j == nj - 1)
-    def _norm():
-        d = d_ref[...]                 # (TM, 1)
-        u_ref[...] = u_ref[...] / jnp.maximum(d, 1e-30)
+    if normalize:
+        @pl.when(j == nj - 1)
+        def _norm():
+            d = d_ref[...]                 # (TM, 1)
+            u_ref[...] = u_ref[...] / jnp.maximum(d, 1e-30)
 
 
 @functools.partial(
@@ -89,43 +104,57 @@ def affinity_matmat(
     x: jax.Array,
     v: jax.Array,
     d: jax.Array | None = None,
+    xc: jax.Array | None = None,
     *,
     kind: str = "cosine_shifted",
     sigma: float = 1.0,
     tm: int = 256,
     tn: int = 256,
     interpret: bool = False,
+    row_offset: jax.Array | int = 0,
+    col_offset: jax.Array | int = 0,
 ) -> jax.Array:
-    """U = (A @ V) / d with A regenerated tile-by-tile from features ``x``.
+    """U = (A @ V) / d with A regenerated tile-by-tile from features.
 
-    Shapes: x (n, m), v (n, r), d (n,) or None (no normalization); returns
-    (n, r) f32. For the cosine kinds pass L2-row-normalized features; for
-    ``rbf`` pass raw features plus the bandwidth ``sigma``. No (n, n) array
-    is ever allocated — peak memory is O(n m + n r).
+    Shapes: x (R, m) row features, xc (C, m) col features (None — the
+    square self-stripe xc = x), v (C, r), d (R,) or None (no
+    normalization); returns (R, r) f32. The offsets locate the stripe in
+    the global matrix for the diagonal mask. For the cosine kinds pass
+    L2-row-normalized features; for ``rbf`` pass raw features plus the
+    bandwidth ``sigma``. No (R, C) array is ever allocated — peak memory
+    is O((R + C)·m + (R + C)·r).
     """
-    n, m = x.shape
+    if xc is None:
+        xc = x
+    n_rows, m = x.shape
+    n_cols = xc.shape[0]
     r = v.shape[1]
-    n_pad = round_up_to_lcm(n, tm, tn)
+    rp = pl.cdiv(n_rows, tm) * tm
+    cp = pl.cdiv(n_cols, tn) * tn
+    normalize = d is not None
     if d is None:
-        d = jnp.ones((n,), jnp.float32)
-    if n_pad != n:
-        x = jnp.pad(x, ((0, n_pad - n), (0, 0)))
-        v = jnp.pad(v, ((0, n_pad - n), (0, 0)))
-        d = jnp.pad(d, (0, n_pad - n), constant_values=1.0)
-    x32 = x.astype(jnp.float32)
-    sq = jnp.sum(x32 * x32, axis=1, keepdims=True)       # (n_pad, 1)
+        d = jnp.ones((n_rows,), jnp.float32)
+    xr32 = jnp.pad(x.astype(jnp.float32), ((0, rp - n_rows), (0, 0)))
+    xc32 = jnp.pad(xc.astype(jnp.float32), ((0, cp - n_cols), (0, 0)))
+    vp = jnp.pad(v.astype(jnp.float32), ((0, cp - n_cols), (0, 0)))
+    dp = jnp.pad(d.astype(jnp.float32), (0, rp - n_rows), constant_values=1.0)
+    sqr = jnp.sum(xr32 * xr32, axis=1, keepdims=True)    # (rp, 1)
+    sqc = jnp.sum(xc32 * xc32, axis=1, keepdims=True)    # (cp, 1)
+    off = jnp.array([row_offset, col_offset], jnp.int32).reshape(1, 2)
 
-    grid = (n_pad // tm, n_pad // tn)
+    grid = (rp // tm, cp // tn)
     kernel = functools.partial(
         _streaming_kernel,
-        kind=kind, n=n, tm=tm, tn=tn,
+        kind=kind, n_rows=n_rows, n_cols=n_cols, tm=tm, tn=tn,
         inv_two_sigma_sq=float(1.0 / (2.0 * sigma * sigma)),
-        nj=grid[1],
+        nj=grid[1], normalize=normalize,
     )
     u = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),        # global offsets
             pl.BlockSpec((tm, m), lambda i, j: (i, 0)),   # row slab
             pl.BlockSpec((tn, m), lambda i, j: (j, 0)),   # col slab
             pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),   # row sq-norms
@@ -134,16 +163,17 @@ def affinity_matmat(
             pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),   # degree
         ],
         out_specs=pl.BlockSpec((tm, r), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_pad, r), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((rp, r), jnp.float32),
         interpret=interpret,
-    )(x32, x32, sq, sq, v.astype(jnp.float32),
-      d.astype(jnp.float32)[:, None])
-    return u[:n]
+    )(off, xr32, xc32, sqr, sqc, vp, dp[:, None])
+    return u[:n_rows]
 
 
 def _streaming_degree_kernel(
+    off_ref,
     xr_ref, xc_ref, sqr_ref, sqc_ref, d_ref,
-    *, kind: str, n: int, tm: int, tn: int, inv_two_sigma_sq: float,
+    *, kind: str, n_rows: int, n_cols: int, tm: int, tn: int,
+    inv_two_sigma_sq: float,
 ):
     i = pl.program_id(0)
     j = pl.program_id(1)
@@ -164,9 +194,11 @@ def _streaming_degree_kernel(
     else:
         raise ValueError(kind)
 
-    rows = i * tm + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 0)
-    cols = j * tn + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 1)
-    valid = (rows != cols) & (rows < n) & (cols < n)
+    lrows = i * tm + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 0)
+    lcols = j * tn + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 1)
+    grows = off_ref[0, 0] + lrows
+    gcols = off_ref[0, 1] + lcols
+    valid = (grows != gcols) & (lrows < n_rows) & (lcols < n_cols)
     a = jnp.where(valid, a, 0.0)
 
     # identical VPU reduction to the fused RowSum in kernels/affinity.py, so
@@ -189,39 +221,51 @@ def _streaming_degree_kernel(
 )
 def affinity_degree_streaming(
     x: jax.Array,
+    xc: jax.Array | None = None,
     *,
     kind: str = "cosine_shifted",
     sigma: float = 1.0,
     tm: int = 256,
     tn: int = 256,
     interpret: bool = False,
+    row_offset: jax.Array | int = 0,
+    col_offset: jax.Array | int = 0,
 ) -> jax.Array:
-    """Degree vector D = A @ 1 in one streamed sweep — the paper's
-    AffinityMatrix + RowSum fusion (O1a) without the O(n^2) A write."""
-    n, m = x.shape
-    n_pad = round_up_to_lcm(n, tm, tn)
-    if n_pad != n:
-        x = jnp.pad(x, ((0, n_pad - n), (0, 0)))
-    x32 = x.astype(jnp.float32)
-    sq = jnp.sum(x32 * x32, axis=1, keepdims=True)
+    """Degree stripe D = A[stripe] @ 1 in one streamed sweep — the paper's
+    AffinityMatrix + RowSum fusion (O1a) without the O(n^2) A write. With
+    ``xc`` given, returns the partial row sums over that column block only
+    (the ring accumulates these across stages)."""
+    if xc is None:
+        xc = x
+    n_rows, m = x.shape
+    n_cols = xc.shape[0]
+    rp = pl.cdiv(n_rows, tm) * tm
+    cp = pl.cdiv(n_cols, tn) * tn
+    xr32 = jnp.pad(x.astype(jnp.float32), ((0, rp - n_rows), (0, 0)))
+    xc32 = jnp.pad(xc.astype(jnp.float32), ((0, cp - n_cols), (0, 0)))
+    sqr = jnp.sum(xr32 * xr32, axis=1, keepdims=True)
+    sqc = jnp.sum(xc32 * xc32, axis=1, keepdims=True)
+    off = jnp.array([row_offset, col_offset], jnp.int32).reshape(1, 2)
 
-    grid = (n_pad // tm, n_pad // tn)
+    grid = (rp // tm, cp // tn)
     kernel = functools.partial(
         _streaming_degree_kernel,
-        kind=kind, n=n, tm=tm, tn=tn,
+        kind=kind, n_rows=n_rows, n_cols=n_cols, tm=tm, tn=tn,
         inv_two_sigma_sq=float(1.0 / (2.0 * sigma * sigma)),
     )
     d = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((tm, m), lambda i, j: (i, 0)),
             pl.BlockSpec((tn, m), lambda i, j: (j, 0)),
             pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
             pl.BlockSpec((tn, 1), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((rp, 1), jnp.float32),
         interpret=interpret,
-    )(x32, x32, sq, sq)
-    return d[:n, 0]
+    )(off, xr32, xc32, sqr, sqc)
+    return d[:n_rows, 0]

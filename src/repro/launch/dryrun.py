@@ -300,9 +300,10 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
 # ---------------------------------------------------------------------------
 
 GPIC_CELLS = {
-    # name: (variant, n_points, n_features)
+    # name: (engine, n_points, n_features)
     "explicit_262k": ("explicit", 262_144, 64),
-    "matrixfree_4m": ("matrixfree", 4_194_304, 64),
+    "streaming_1m": ("streaming", 1_048_576, 64),
+    "matrixfree_4m": ("matrix_free", 4_194_304, 64),
 }
 
 
@@ -314,7 +315,7 @@ def dryrun_gpic(shape_name: str, *, multi_pod: bool,
     reports [affinity build + ONE power iteration] — the natural per-step
     unit for a convergence loop (EXPERIMENTS.md §Roofline notes this).
     """
-    from ..core.distributed import distributed_gpic, distributed_gpic_matrix_free
+    from ..core import GPICConfig, run_gpic
 
     variant, n, m = GPIC_CELLS[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -331,16 +332,12 @@ def dryrun_gpic(shape_name: str, *, multi_pod: bool,
     key_sh = NamedSharding(mesh, P())
 
     naive = os.environ.get("REPRO_NAIVE", "0") == "1"
-    if variant == "explicit":
-        a_dtype = jnp.float32 if naive else jnp.bfloat16   # opt O4
-        fn = lambda x, key: distributed_gpic(
-            x, 4, key=key, mesh=mesh, shard_axes=axes,
-            affinity_kind="cosine_shifted", max_iter=50, a_dtype=a_dtype,
-            fold_shift=not naive)                          # opt O5
-    else:
-        fn = lambda x, key: distributed_gpic_matrix_free(
-            x, 4, key=key, mesh=mesh, shard_axes=axes,
-            affinity_kind="cosine_shifted", max_iter=50)
+    cfg = GPICConfig(engine=variant, mesh=mesh, shard_axes=axes,
+                     affinity_kind="cosine_shifted", max_iter=50)
+    if variant == "explicit" and not naive:
+        cfg = cfg.with_(a_dtype=jnp.bfloat16,             # opt O4
+                        fold_shift=True)                  # opt O5
+    fn = lambda x, key: run_gpic(x, 4, cfg, key=key)
 
     t0 = time.time()
     with mesh:
@@ -366,9 +363,10 @@ def dryrun_gpic(shape_name: str, *, multi_pod: bool,
     collective_s = coll_bytes / ICI_BW
     dominant = max((("compute", compute_s), ("memory", memory_s),
                     ("collective", collective_s)), key=lambda kv: kv[1])[0]
-    # "model flops" for GPIC: affinity 2n²m/P + one matvec 2n²/P (explicit)
-    # or 4nm/P per iteration (matrix-free)
-    if variant == "explicit":
+    # "model flops" for GPIC: affinity 2n²m/P + one matvec 2n²/P (explicit;
+    # streaming does the same arithmetic, regenerated inside the sweep) or
+    # 4nm/P per iteration (matrix-free)
+    if variant in ("explicit", "streaming"):
         mf = (2.0 * n * n * m + 2.0 * n * n) / n_chips
     else:
         mf = 8.0 * n * m / n_chips

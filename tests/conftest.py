@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import functools
 import inspect
+import os
 import random
 import sys
 import types
@@ -135,3 +136,13 @@ try:
     import hypothesis  # noqa: F401  (real package wins when present)
 except ModuleNotFoundError:
     _install_hypothesis_fallback()
+
+
+# Multi-device subprocess harness: the tests/ src/ layout means conftest
+# must put src/ on sys.path itself before the repro import works when
+# pytest is launched without PYTHONPATH.
+_SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.testing import run_mesh_subprocess as run_in_mesh_subprocess  # noqa: E402,F401

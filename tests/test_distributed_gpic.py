@@ -3,21 +3,16 @@
 These run in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
 so the main pytest process keeps its single-device view (per the dry-run rules).
 """
-import os
-import subprocess
-import sys
 import textwrap
 
 import pytest
 
-REPO_SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+from conftest import run_in_mesh_subprocess
 
 
 def _run_in_subprocess(body: str) -> str:
     code = textwrap.dedent(
         """
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from repro.data import gaussians, three_circles
         from repro.core import pic_reference, adjusted_rand_index
@@ -27,14 +22,7 @@ def _run_in_subprocess(body: str) -> str:
         mesh = jax.make_mesh((8,), ("data",))
         """
     ) + textwrap.dedent(body)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = REPO_SRC
-    out = subprocess.run(
-        [sys.executable, "-c", code], capture_output=True, text=True,
-        env=env, timeout=600,
-    )
-    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
-    return out.stdout
+    return run_in_mesh_subprocess(code, timeout=600)
 
 
 @pytest.mark.slow
