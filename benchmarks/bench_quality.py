@@ -1,0 +1,83 @@
+"""Embedding-quality + QR-cost benchmark (ISSUE 3 acceptance evidence).
+
+Two sections:
+
+  quality/<dataset>/<mode>   end-to-end ``run_gpic`` wall time with the ARI
+                             against ground truth in the derived column —
+                             the per-dataset-per-mode quality table
+                             (DESIGN.md §10) as a tracked snapshot row.
+  quality/qr_cost/r=<r>      wall time of ONE pinned Cholesky-QR step
+                             (Pallas Gram kernel + factor + solve) on the
+                             (n, r) block at r ∈ {1, 4, 8}, with the cost
+                             of one explicit A-sweep alongside — the ratio
+                             is the per-sweep overhead the orthogonal mode
+                             pays at qr_every=1 (O(n r²) against O(n² r)).
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only quality
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    GPICConfig,
+    adjusted_rand_index,
+    orthonormalize_block,
+    run_gpic,
+)
+from repro.core.affinity import row_normalize_features
+from repro.core.operators import explicit_operator
+from repro.data import anisotropic, gaussians, three_circles, two_moons
+from repro.kernels import ops
+
+from .common import csv_row, time_fn
+
+#: the quality-suite scenario matrix (thresholds asserted in
+#: tests/test_embedding_quality.py; this records the measured values)
+DATASETS = (
+    ("blobs", gaussians, 4, 0.3),
+    ("moons", two_moons, 2, 0.25),
+    ("three_circles", three_circles, 3, 0.3),
+    ("anisotropic", anisotropic, 3, 0.3),
+)
+MODES = (("pic", 1), ("orthogonal", 2), ("ensemble", 1))
+
+
+def run(n=480, max_iter=400, qr_n=1024):
+    rows = []
+
+    # --- ARI per dataset per embedding mode ------------------------------
+    for name, gen, k, sigma in DATASETS:
+        x, y = gen(n, seed=0)
+        xj = jnp.asarray(x)
+        for mode, r in MODES:
+            cfg = GPICConfig(affinity_kind="rbf", sigma=sigma,
+                             max_iter=max_iter, n_vectors=r, embedding=mode)
+            t, res = time_fn(run_gpic, xj, k, cfg, key=jax.random.key(1))
+            ari = adjusted_rand_index(y, np.asarray(res.labels))
+            rows.append(csv_row(
+                f"quality/{name}/{mode}", t,
+                f"ari={ari:.3f} r={r} n_iter={int(res.n_iter)}"))
+
+    # --- per-sweep QR cost at r in {1, 4, 8} -----------------------------
+    x, _ = gaussians(qr_n, seed=0)
+    xn = row_normalize_features(jnp.asarray(x))
+    op = explicit_operator(xn, kind="cosine_shifted")
+    for r in (1, 4, 8):
+        v = jax.random.uniform(jax.random.key(r), (qr_n, r))
+        v = v / jnp.sum(jnp.abs(v), axis=0, keepdims=True)
+        qr_step = jax.jit(lambda vv: orthonormalize_block(op, vv))
+        t_qr, _ = time_fn(qr_step, v)
+        t_sweep, _ = time_fn(jax.jit(op.matmat), v)
+        rows.append(csv_row(
+            f"quality/qr_cost/r={r}", t_qr,
+            f"sweep_us={t_sweep * 1e6:.1f} "
+            f"qr_over_sweep={t_qr / max(t_sweep, 1e-12):.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

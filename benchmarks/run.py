@@ -34,14 +34,14 @@ def main() -> None:
                     help="paper-scale sizes (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,table2,fig3,exp2,"
-                         "roofline,multivec,distributed")
-    ap.add_argument("--json", nargs="?", const="BENCH_PR2.json", default=None,
+                         "roofline,multivec,distributed,quality")
+    ap.add_argument("--json", nargs="?", const="BENCH_PR3.json", default=None,
                     metavar="PATH",
-                    help="write a JSON perf snapshot (default BENCH_PR2.json)")
+                    help="write a JSON perf snapshot (default BENCH_PR3.json)")
     args = ap.parse_args()
 
     from . import (bench_distributed, bench_exp2, bench_fig3, bench_multivec,
-                   bench_table1, bench_table2, roofline)
+                   bench_quality, bench_table1, bench_table2, roofline)
 
     jobs = {
         "table1": lambda: bench_table1.run(
@@ -59,6 +59,11 @@ def main() -> None:
             n=2048 if args.full else 1024),
         "distributed": lambda: bench_distributed.run(
             n=2048 if args.full else 1024),
+        # the quality section: per-dataset ARI for every embedding mode +
+        # per-sweep QR cost at r in {1, 4, 8} (tracked across snapshots)
+        "quality": lambda: bench_quality.run(
+            n=960 if args.full else 480,
+            qr_n=2048 if args.full else 1024),
     }
     selected = (args.only.split(",") if args.only else list(jobs))
 

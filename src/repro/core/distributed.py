@@ -57,11 +57,12 @@ from .operators import (
 )
 from .pic import PICResult, make_pic_result
 from .power import (
-    batched_power_iteration,
     init_power_vectors_local,
     random_start_vectors,
+    run_power_embedding,
     standardize_columns,
 )
+
 
 
 def _mesh_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
@@ -74,20 +75,34 @@ def _local_slice(idx, n_loc, arr):
 
 
 def _run_sharded(op, axes, *, key, u0t, k, eps, max_iter, kmeans_iters,
+                 embedding="pic", qr_every=1, snapshot_iters=None,
                  force_reference=False):
     """Seed the local engine state from the operator's degrees, run THE
-    convergence engine, gather once, and k-means the replicated embedding."""
+    convergence engine, gather once, and k-means the replicated embedding.
+
+    The embedding-mode routing is the same :func:`run_power_embedding` the
+    local entry points use: the QR step's Gram partials run on each
+    device's chunk and are finished by the operator's ``psum`` binding, and
+    ensemble snapshots are taken on the local chunk and gathered once after
+    the loop — the sharded block algebra IS the single-device one.
+    Returns (labels, v_full, emb_full, t_cols, done): the replicated final
+    (n, r) engine state and the replicated (n, c) matrix that was
+    clustered (the same array unless ensemble widened it to c = r·S).
+    """
     idx = jax.lax.axis_index(_axis_tuple(axes))
     n_loc = op.degree.shape[0]
     u0t_loc = _local_slice(idx, n_loc, u0t)
     v0_loc = init_power_vectors_local(
         op.degree, u0t_loc, sum_fn=op.sum, dtype=jnp.float32)
-    v_loc, t_cols, done = batched_power_iteration(op, v0_loc, eps, max_iter)
-    v_full = op.all_gather(v_loc)                       # once, after the loop
-    emb = standardize_columns(v_full)
+    v_loc, t_cols, done, emb_loc = run_power_embedding(
+        op, v0_loc, eps, max_iter, embedding=embedding, qr_every=qr_every,
+        snapshot_iters=snapshot_iters)
+    emb_full = op.all_gather(emb_loc)                   # once, after the loop
+    v_full = emb_full if emb_loc is v_loc else op.all_gather(v_loc)
+    emb = standardize_columns(emb_full)
     labels, _ = kmeans(key, emb, k, iters=kmeans_iters,
                        force_reference=force_reference)
-    return labels, v_full, t_cols, done
+    return labels, v_full, emb_full, t_cols, done
 
 
 @functools.partial(
@@ -95,7 +110,7 @@ def _run_sharded(op, axes, *, key, u0t, k, eps, max_iter, kmeans_iters,
     static_argnames=("k", "mesh", "shard_axes", "max_iter", "kmeans_iters",
                      "affinity_kind", "sigma", "eps_scale", "a_dtype",
                      "fold_shift", "n_vectors", "engine", "tile",
-                     "use_pallas"),
+                     "use_pallas", "embedding", "qr_every", "snapshot_iters"),
 )
 def distributed_gpic(
     x: jax.Array,
@@ -115,6 +130,9 @@ def distributed_gpic(
     engine: str = "explicit",
     tile: int | None = None,
     use_pallas: bool = True,
+    embedding: str = "pic",
+    qr_every: int = 1,
+    snapshot_iters: tuple | None = None,
 ) -> PICResult:
     """Sharded GPIC on the Pallas kernels (paper-faithful math, row stripes).
 
@@ -132,6 +150,9 @@ def distributed_gpic(
 
     ``n_vectors=r`` runs the multi-vector engine — r power vectors in one
     (n, r) state, ONE stripe sweep per iteration (DESIGN.md §4).
+    ``embedding`` selects the block mode ('pic' | 'orthogonal' |
+    'ensemble', DESIGN.md §10) — the QR/snapshot algebra runs through the
+    operator's reduction primitives, so it is the single-device algebra.
     """
     axes = _axis_tuple(shard_axes)
     n = x.shape[0]
@@ -155,22 +176,26 @@ def distributed_gpic(
                              "(expected 'explicit' or 'streaming')")
         return _run_sharded(op, axes, key=key, u0t=u0t, k=k, eps=eps,
                             max_iter=max_iter, kmeans_iters=kmeans_iters,
+                            embedding=embedding, qr_every=qr_every,
+                            snapshot_iters=snapshot_iters,
                             force_reference=not use_pallas)
 
     out = shard_map(
         fn, mesh=mesh,
         in_specs=(P(axes), P(), P()),
-        out_specs=(P(), P(), P(), P()),
+        out_specs=(P(), P(), P(), P(), P()),
         check_rep=False,
     )(x, kkm, u0t)
-    labels, v, t_cols, done = out
-    return make_pic_result(labels, v, t_cols, done)
+    labels, v, emb_full, t_cols, done = out
+    return make_pic_result(labels, v, t_cols, done, embedding=embedding,
+                           embeddings=emb_full)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("k", "mesh", "shard_axes", "max_iter", "kmeans_iters",
-                     "affinity_kind", "eps_scale", "n_vectors", "use_pallas"),
+                     "affinity_kind", "eps_scale", "n_vectors", "use_pallas",
+                     "embedding", "qr_every", "snapshot_iters"),
 )
 def distributed_gpic_matrix_free(
     x: jax.Array,
@@ -185,6 +210,9 @@ def distributed_gpic_matrix_free(
     affinity_kind: AffinityKind = "cosine_shifted",
     n_vectors: int = 1,
     use_pallas: bool = True,
+    embedding: str = "pic",
+    qr_every: int = 1,
+    snapshot_iters: tuple | None = None,
 ) -> PICResult:
     """Matrix-free distributed GPIC (O2): psum(m r) per step, scales to 1000s
     of nodes. Cosine affinity kinds only (they factor; DESIGN.md §2)."""
@@ -198,20 +226,24 @@ def distributed_gpic_matrix_free(
 
     def fn(x_loc, key, u0t):
         op = sharded_matrix_free_operator(x_loc, axes=axes,
-                                          kind=affinity_kind)
+                                          kind=affinity_kind,
+                                          use_pallas=use_pallas)
         # the sweep itself is jnp either way; the flag still governs k-means
         return _run_sharded(op, axes, key=key, u0t=u0t, k=k, eps=eps,
                             max_iter=max_iter, kmeans_iters=kmeans_iters,
+                            embedding=embedding, qr_every=qr_every,
+                            snapshot_iters=snapshot_iters,
                             force_reference=not use_pallas)
 
     out = shard_map(
         fn, mesh=mesh,
         in_specs=(P(axes), P(), P()),
-        out_specs=(P(), P(), P(), P()),
+        out_specs=(P(), P(), P(), P(), P()),
         check_rep=False,
     )(x, kkm, u0t)
-    labels, v, t_cols, done = out
-    return make_pic_result(labels, v, t_cols, done)
+    labels, v, emb_full, t_cols, done = out
+    return make_pic_result(labels, v, t_cols, done, embedding=embedding,
+                           embeddings=emb_full)
 
 
 def shard_points(x, mesh: Mesh, shard_axes="data"):

@@ -26,6 +26,11 @@ multi-vector convergence engine (core/power.py): the iteration state is one
 (the paper's exactness claim). ``gpic_matrix_free`` is the beyond-paper O2
 jnp path: O(n·m) per iteration, cosine kinds only.
 
+Every entry point takes ``embedding='pic' | 'orthogonal' | 'ensemble'``
+(DESIGN.md §10): the classic per-column loop, the pinned-QR block
+iteration (nested-structure quality fix; Gram products on the Pallas
+tall-skinny kernel), or the diffusion-time snapshot ensemble.
+
 Prefer the ``run_gpic``/``GPICConfig`` front door (core/pipeline.py) over
 assembling these keyword lists by hand.
 """
@@ -47,6 +52,7 @@ from .pic import PICResult, make_pic_result
 from .power import (
     batched_power_iteration,
     init_power_vectors,
+    run_power_embedding,
     standardize_columns,
 )
 
@@ -59,6 +65,7 @@ _truncated_power_iteration = batched_power_iteration
     static_argnames=(
         "k", "max_iter", "kmeans_iters", "affinity_kind", "sigma",
         "n_vectors", "use_pallas", "tile", "engine", "a_dtype",
+        "embedding", "qr_every", "snapshot_iters",
     ),
 )
 def gpic(
@@ -76,6 +83,9 @@ def gpic(
     tile: int | None = None,
     engine: str = "explicit",
     a_dtype=jnp.float32,
+    embedding: str = "pic",
+    qr_every: int = 1,
+    snapshot_iters: tuple | None = None,
 ) -> PICResult:
     """Accelerated PIC via the multi-vector power engine.
 
@@ -102,17 +112,21 @@ def gpic(
 
     kkm, krand = jax.random.split(key)
     v0 = init_power_vectors(krand, op.degree, n_vectors)
-    v, t_cols, done = batched_power_iteration(op, v0, eps, max_iter)
-    emb = standardize_columns(v)
+    v, t_cols, done, emb_raw = run_power_embedding(
+        op, v0, eps, max_iter, embedding=embedding, qr_every=qr_every,
+        snapshot_iters=snapshot_iters)
+    emb = standardize_columns(emb_raw)
     labels, _ = kmeans(kkm, emb, k, iters=kmeans_iters,
                        force_reference=not use_pallas)
-    return make_pic_result(labels, v, t_cols, done)
+    return make_pic_result(labels, v, t_cols, done, embedding=embedding,
+                           embeddings=emb_raw)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("k", "max_iter", "kmeans_iters", "affinity_kind",
-                     "n_vectors", "use_pallas"),
+                     "n_vectors", "use_pallas", "embedding", "qr_every",
+                     "snapshot_iters"),
 )
 def gpic_matrix_free(
     x: jax.Array,
@@ -125,6 +139,9 @@ def gpic_matrix_free(
     affinity_kind: AffinityKind = "cosine_shifted",
     n_vectors: int = 1,
     use_pallas: bool = True,
+    embedding: str = "pic",
+    qr_every: int = 1,
+    snapshot_iters: tuple | None = None,
 ) -> PICResult:
     """Beyond-paper O2: PIC without materializing A (cosine kinds only).
 
@@ -136,13 +153,16 @@ def gpic_matrix_free(
     if eps is None:
         eps = 1e-5 / n
     xn = row_normalize_features(x)
-    op = matrix_free_operator(xn, kind=affinity_kind)
+    op = matrix_free_operator(xn, kind=affinity_kind, use_pallas=use_pallas)
 
     kkm, krand = jax.random.split(key)
     v0 = init_power_vectors(krand, op.degree, n_vectors)
-    v, t_cols, done = batched_power_iteration(op, v0, eps, max_iter)
-    emb = standardize_columns(v)
+    v, t_cols, done, emb_raw = run_power_embedding(
+        op, v0, eps, max_iter, embedding=embedding, qr_every=qr_every,
+        snapshot_iters=snapshot_iters)
+    emb = standardize_columns(emb_raw)
     # the sweep itself is jnp either way; the flag still governs k-means
     labels, _ = kmeans(kkm, emb, k, iters=kmeans_iters,
                        force_reference=not use_pallas)
-    return make_pic_result(labels, v, t_cols, done)
+    return make_pic_result(labels, v, t_cols, done, embedding=embedding,
+                           embeddings=emb_raw)

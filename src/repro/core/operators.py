@@ -25,6 +25,8 @@ core/distributed.py, front door in core/pipeline.py):
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -45,6 +47,14 @@ def mesh_reductions(axes):
         lambda x: jax.lax.pmax(x, axes),
         lambda x: jax.lax.all_gather(x, axes, axis=0, tiled=True),
     )
+
+
+def _gram_binding(use_pallas: bool):
+    """The operator's local-chunk Gram: the Pallas tall-skinny kernel, or
+    its jnp oracle when the caller routes everything to references. Local
+    and sharded builders share this so the block algebra of the orthogonal
+    embedding runs the identical kernel on both paths (DESIGN.md §10)."""
+    return functools.partial(ops.gram, force_reference=not use_pallas)
 
 
 # ---------------------------------------------------------------------------
@@ -68,7 +78,8 @@ def explicit_operator(inp, *, kind: AffinityKind = "cosine_shifted",
         return ops.degree_normalized_matmat(
             a, v, d, tm=tile, tn=tile, force_reference=not use_pallas)
 
-    return PowerOperator(matmat=matmat, degree=d)
+    return PowerOperator(matmat=matmat, degree=d,
+                         gram=_gram_binding(use_pallas))
 
 
 def streaming_operator(inp, *, kind: AffinityKind = "cosine_shifted",
@@ -88,13 +99,15 @@ def streaming_operator(inp, *, kind: AffinityKind = "cosine_shifted",
             force_reference=not use_pallas,
         )
 
-    return PowerOperator(matmat=matmat, degree=d)
+    return PowerOperator(matmat=matmat, degree=d,
+                         gram=_gram_binding(use_pallas))
 
 
-def matrix_free_operator(xn, *, kind: AffinityKind = "cosine_shifted"
-                         ) -> PowerOperator:
+def matrix_free_operator(xn, *, kind: AffinityKind = "cosine_shifted",
+                         use_pallas: bool = True) -> PowerOperator:
     """Factored jnp product A V = f(X̂(X̂ᵀV)) − V (O2): O(n·m·r) per sweep,
-    cosine kinds only. ``xn`` must be row-normalized."""
+    cosine kinds only. ``xn`` must be row-normalized. The sweep has no
+    Pallas realization; ``use_pallas`` governs the Gram binding only."""
     n = xn.shape[0]
     d = matmat_matrix_free(xn, jnp.ones((n,), xn.dtype), kind)
 
@@ -102,7 +115,8 @@ def matrix_free_operator(xn, *, kind: AffinityKind = "cosine_shifted"
         return matmat_matrix_free(xn, v, kind) / jnp.maximum(
             d, 1e-30)[:, None]
 
-    return PowerOperator(matmat=matmat, degree=d)
+    return PowerOperator(matmat=matmat, degree=d,
+                         gram=_gram_binding(use_pallas))
 
 
 # ---------------------------------------------------------------------------
@@ -164,12 +178,13 @@ def sharded_explicit_operator(x_loc, *, axes, kind: AffinityKind,
                 force_reference=not use_pallas)
 
     return PowerOperator(matmat=matmat, degree=d_loc,
-                         sum=psum, max=pmax, all_gather=gather)
+                         sum=psum, max=pmax, all_gather=gather,
+                         gram=_gram_binding(use_pallas))
 
 
 def sharded_matrix_free_operator(x_loc, *, axes,
-                                 kind: AffinityKind = "cosine_shifted"
-                                 ) -> PowerOperator:
+                                 kind: AffinityKind = "cosine_shifted",
+                                 use_pallas: bool = True) -> PowerOperator:
     """X̂ row-sharded factored product: per sweep one psum of an (m, r)
     block and one (r,) psum — O(m r) collectives, the configuration that
     scales to thousands of nodes. Cosine kinds only (they factor)."""
@@ -184,7 +199,8 @@ def sharded_matrix_free_operator(x_loc, *, axes,
         return av / jnp.maximum(d_loc, 1e-30)[:, None]
 
     return PowerOperator(matmat=matmat, degree=d_loc,
-                         sum=psum, max=pmax, all_gather=gather)
+                         sum=psum, max=pmax, all_gather=gather,
+                         gram=_gram_binding(use_pallas))
 
 
 def sharded_streaming_operator(x_loc, *, axes, mesh_size: int,
@@ -262,4 +278,5 @@ def sharded_streaming_operator(x_loc, *, axes, mesh_size: int,
         return u / jnp.maximum(d_loc, 1e-30)[:, None]
 
     return PowerOperator(matmat=matmat, degree=d_loc,
-                         sum=psum, max=pmax, all_gather=gather)
+                         sum=psum, max=pmax, all_gather=gather,
+                         gram=_gram_binding(use_pallas))

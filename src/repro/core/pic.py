@@ -13,7 +13,7 @@ Two variants:
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional
 
 import jax
@@ -25,6 +25,7 @@ from .kmeans import kmeans
 from .power import (
     batched_power_iteration,
     init_power_vectors,
+    run_power_embedding,
     standardize_columns,
 )
 
@@ -36,19 +37,32 @@ class PICResult:
     embedding: jax.Array   # (n,) final power-iteration vector v_t (column 0)
     n_iter: jax.Array      # iterations actually executed (column 0)
     converged: jax.Array   # bool — stopped by the epsilon rule (vs max_iter)
-    embeddings: jax.Array      # (n, r) full multi-vector embedding
+    embeddings: jax.Array      # the (n, c) matrix k-means clustered: the
+    #   (n, r) engine block for 'pic'/'orthogonal', the (n, r·S) snapshot
+    #   concatenation for 'ensemble' — see ``embedding_mode``
     n_iter_cols: jax.Array     # (r,) int32 per-column iteration counts
     converged_cols: jax.Array  # (r,) bool per-column convergence flags
+    #: which embedding mode ('pic' | 'orthogonal' | 'ensemble') produced
+    #: ``embeddings`` — static metadata, not a traced leaf
+    embedding_mode: str = field(metadata=dict(static=True), default="pic")
 
 
-def make_pic_result(labels, v, t_cols, done) -> PICResult:
+def make_pic_result(labels, v, t_cols, done, *, embedding="pic",
+                    embeddings=None) -> PICResult:
     """Assemble a PICResult from the engine outputs: labels (n,), the final
     (n, r) state, and the per-column (r,) iteration counts / flags. Column 0
     (the paper's degree-seeded vector) backs the scalar back-compat fields;
-    the full state rides along so multi-vector callers stop re-deriving it."""
+    the full state rides along so multi-vector callers stop re-deriving it.
+
+    ``embedding`` records which embedding mode produced the clustered
+    matrix; ``embeddings`` overrides that matrix when it is wider than the
+    engine state (the ensemble concatenation) — ``v`` still supplies the
+    column-0 scalars.
+    """
     return PICResult(
         labels=labels, embedding=v[:, 0], n_iter=t_cols[0], converged=done[0],
-        embeddings=v, n_iter_cols=t_cols, converged_cols=done,
+        embeddings=v if embeddings is None else embeddings,
+        n_iter_cols=t_cols, converged_cols=done, embedding_mode=embedding,
     )
 
 
@@ -81,7 +95,8 @@ def standardize_embedding(v: jax.Array) -> jax.Array:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "max_iter", "kmeans_iters", "affinity_kind", "n_vectors"),
+    static_argnames=("k", "max_iter", "kmeans_iters", "affinity_kind",
+                     "n_vectors", "embedding", "qr_every", "snapshot_iters"),
 )
 def pic_reference(
     x: jax.Array,
@@ -94,17 +109,22 @@ def pic_reference(
     affinity_kind: AffinityKind = "cosine_shifted",
     sigma: float | None = None,
     n_vectors: int = 1,
+    embedding: str = "pic",
+    qr_every: int = 1,
+    snapshot_iters: tuple | None = None,
 ) -> PICResult:
     """Paper Algorithm 1 end-to-end on raw features ``x`` of shape (n, m)."""
     a = affinity_matrix(x, kind=affinity_kind, sigma=sigma)
     return pic_from_affinity(
         a, k, key=key, eps=eps, max_iter=max_iter, kmeans_iters=kmeans_iters,
-        n_vectors=n_vectors,
+        n_vectors=n_vectors, embedding=embedding, qr_every=qr_every,
+        snapshot_iters=snapshot_iters,
     )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "max_iter", "kmeans_iters", "n_vectors")
+    jax.jit, static_argnames=("k", "max_iter", "kmeans_iters", "n_vectors",
+                              "embedding", "qr_every", "snapshot_iters")
 )
 def pic_from_affinity(
     a: jax.Array,
@@ -115,6 +135,9 @@ def pic_from_affinity(
     max_iter: int = 50,
     kmeans_iters: int = 25,
     n_vectors: int = 1,
+    embedding: str = "pic",
+    qr_every: int = 1,
+    snapshot_iters: tuple | None = None,
 ) -> PICResult:
     """PIC given a pre-built dense affinity matrix A (paper-faithful path).
 
@@ -124,7 +147,9 @@ def pic_from_affinity(
     starts and clusters the stacked embedding (Lin & Cohen's multi-vector
     extension; beyond-paper robustness option O3). All vectors iterate as
     ONE (n, r) batched state — a single W mat-mat per iteration instead of
-    r separate sweeps (core/power.py).
+    r separate sweeps (core/power.py). ``embedding`` selects the block mode
+    ('pic' | 'orthogonal' | 'ensemble', DESIGN.md §10); this oracle path
+    runs the block algebra through the bare ``w @ V`` operator (jnp Gram).
     """
     n = a.shape[0]
     if eps is None:
@@ -134,11 +159,13 @@ def pic_from_affinity(
 
     kkm, krand = jax.random.split(key)
     v0 = init_power_vectors(krand, d, n_vectors, dtype=a.dtype)
-    v, t_cols, done = batched_power_iteration(
-        lambda vv: w @ vv, v0, eps, max_iter)
-    emb = standardize_columns(v)
+    v, t_cols, done, emb_raw = run_power_embedding(
+        lambda vv: w @ vv, v0, eps, max_iter, embedding=embedding,
+        qr_every=qr_every, snapshot_iters=snapshot_iters)
+    emb = standardize_columns(emb_raw)
     labels, _cent = kmeans(kkm, emb, k, iters=kmeans_iters)
-    return make_pic_result(labels, v, t_cols, done)
+    return make_pic_result(labels, v, t_cols, done, embedding=embedding,
+                           embeddings=emb_raw)
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,7 @@ from .affinity import AffinityKind
 from .distributed import distributed_gpic, distributed_gpic_matrix_free
 from .gpic import gpic, gpic_matrix_free
 from .pic import PICResult
+from .power import EMBEDDINGS
 
 ENGINES = ("explicit", "streaming", "matrix_free")
 
@@ -59,6 +60,14 @@ class GPICConfig:
     Clustering:
       affinity_kind/sigma: similarity (sigma only read for 'rbf').
       n_vectors:    r power vectors in one engine state (O3).
+      embedding:    'pic' (classic per-column loop), 'orthogonal' (block
+                    iteration: column 0 pinned to the classic trajectory,
+                    columns 1..r-1 QR-orthonormalized into the invariant
+                    subspace — the nested-structure fix, DESIGN.md §10),
+                    or 'ensemble' (diffusion-time snapshot concatenation).
+      qr_every:     re-orthonormalization period in sweeps ('orthogonal').
+      snapshot_iters: ascending iteration counts to snapshot ('ensemble';
+                    None = geometric in max_iter).
       eps_scale:    convergence threshold numerator (eps = eps_scale / n).
       max_iter / kmeans_iters: loop caps.
 
@@ -77,6 +86,9 @@ class GPICConfig:
     affinity_kind: AffinityKind = "cosine_shifted"
     sigma: float = 1.0
     n_vectors: int = 1
+    embedding: str = "pic"
+    qr_every: int = 1
+    snapshot_iters: Sequence[int] | None = None
     eps_scale: float = 1e-5
     max_iter: int = 50
     kmeans_iters: int = 25
@@ -112,6 +124,21 @@ def run_gpic(
     if cfg.engine not in ENGINES:
         raise ValueError(
             f"unknown engine {cfg.engine!r} (expected one of {ENGINES})")
+    if cfg.embedding not in EMBEDDINGS:
+        raise ValueError(
+            f"unknown embedding {cfg.embedding!r} "
+            f"(expected one of {EMBEDDINGS})")
+    if cfg.qr_every < 1:
+        raise ValueError(
+            f"qr_every must be >= 1 (a period in sweeps), got {cfg.qr_every}")
+    if cfg.qr_every != 1 and cfg.embedding != "orthogonal":
+        raise ValueError(
+            "qr_every tunes the re-orthonormalization period of "
+            "embedding='orthogonal' only")
+    if cfg.snapshot_iters is not None and cfg.embedding != "ensemble":
+        raise ValueError(
+            "snapshot_iters selects the diffusion times of "
+            "embedding='ensemble' only")
     # reject field combinations the selected route would silently ignore —
     # the front door must not mask misconfiguration a direct call rejects
     if cfg.engine == "matrix_free":
@@ -136,9 +163,13 @@ def run_gpic(
     if key is None:
         key = jax.random.key(cfg.seed)
 
+    snapshot_iters = (None if cfg.snapshot_iters is None
+                      else tuple(cfg.snapshot_iters))
     common = dict(key=key, max_iter=cfg.max_iter,
                   kmeans_iters=cfg.kmeans_iters,
-                  affinity_kind=cfg.affinity_kind, n_vectors=cfg.n_vectors)
+                  affinity_kind=cfg.affinity_kind, n_vectors=cfg.n_vectors,
+                  embedding=cfg.embedding, qr_every=cfg.qr_every,
+                  snapshot_iters=snapshot_iters)
 
     if cfg.mesh is None:
         if cfg.engine == "matrix_free":

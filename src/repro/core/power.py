@@ -14,24 +14,54 @@ single-device loop; bound to ``psum``/``pmax``/``all_gather`` over mesh
 axes inside ``shard_map`` the SAME loop is the sharded one — there is no
 second implementation of the convergence math anywhere in the repo.
 
-Column semantics are EXACTLY the paper's per-vector Algorithm 1/2 loop
-(lines 6-15): each column carries its own delta and acceleration-based
-stopping flag, and a converged column is frozen (its value and delta stop
-updating) while the remaining columns keep iterating. A column's trajectory
-is therefore identical to what a dedicated single-vector loop would have
-produced — the batching changes the cost model, not the math.
+Three embedding modes share the one loop (DESIGN.md §10):
+
+  mode='pic'         EXACTLY the paper's per-vector Algorithm 1/2 loop
+                     (lines 6-15): each column carries its own delta and
+                     acceleration-based stopping flag, and a converged
+                     column is frozen (its value and delta stop updating)
+                     while the remaining columns keep iterating. A column's
+                     trajectory is identical to what a dedicated
+                     single-vector loop would have produced — the batching
+                     changes the cost model, not the math.
+  mode='orthogonal'  block/subspace iteration: column 0 keeps the classic
+                     pinned PIC trajectory (bitwise — deflation target),
+                     while columns 1..r-1 are Cholesky-QR re-orthonormalized
+                     against it and each other every ``qr_every`` sweeps, so
+                     they converge to the successive invariant-subspace
+                     directions of W instead of all collapsing onto the
+                     dominant one. Block columns are NOT frozen (freezing a
+                     coupled subspace breaks its convergence); their done
+                     flags latch the first eps-crossing for reporting.
+  ensemble           :func:`ensemble_power_iteration` snapshots the classic
+                     mode='pic' block at geometrically spaced diffusion
+                     times and returns the stack — a multiscale embedding.
+
+The Gram products that price the re-orthonormalization go through
+``op.gram`` (locally the Pallas tall-skinny Gram kernel or its jnp oracle)
+and are finished across chunks by ``op.sum``, so the sharded engines run
+the identical block algebra.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
+EMBEDDINGS = ("pic", "orthogonal", "ensemble")
+
 
 def _identity(x):
     return x
+
+
+def _gram_jnp(v):
+    """Local-chunk Gram VᵀV in f32 — the default (oracle-math) binding;
+    operator builders rebind to the Pallas tall-skinny kernel."""
+    v32 = v.astype(jnp.float32)
+    return v32.T @ v32
 
 
 @dataclass(frozen=True)
@@ -50,12 +80,16 @@ class PowerOperator:
       max: same for max (identity / ``pmax``).
       all_gather: maps a local (n_loc, ...) chunk to the global (n, ...)
         array (identity locally; tiled ``all_gather`` when sharded).
+      gram: maps the local (n_loc, r) chunk to its LOCAL (r, r) Gram
+        VᵀV partial; ``sum`` finishes the cross-chunk combine. Defaults to
+        the jnp oracle math; operator builders bind the Pallas kernel.
     """
     matmat: Callable[[jax.Array], jax.Array]
     degree: jax.Array | None = None
     sum: Callable[[jax.Array], jax.Array] = field(default=_identity)
     max: Callable[[jax.Array], jax.Array] = field(default=_identity)
     all_gather: Callable[[jax.Array], jax.Array] = field(default=_identity)
+    gram: Callable[[jax.Array], jax.Array] = field(default=_gram_jnp)
 
 
 def as_operator(op) -> PowerOperator:
@@ -65,7 +99,96 @@ def as_operator(op) -> PowerOperator:
     return PowerOperator(matmat=op)
 
 
-def batched_power_iteration(op, v0, eps, max_iter):
+def orthonormalize_block(op, v):
+    """Cholesky-QR of the (n_loc, r) block with column 0 pinned.
+
+    G = VᵀV (global: local Gram finished by ``op.sum``) = LLᵀ, Q = VL⁻ᵀ —
+    column j of Q is column j of V orthogonalized against all earlier
+    columns and L2-normalized (thin QR). Column 0 is returned UNTOUCHED
+    (deflation-style pinning: the classic degree-seeded PIC trajectory is
+    the block's first basis vector, bitwise), which only drops Q's column-0
+    rescale — orthogonality of the later columns against it is unaffected.
+    All chunks compute the same replicated (r, r) factor, so the transform
+    is chunk-local after one ``op.sum``.
+
+    A numerically singular Gram (columns momentarily aligned — possible
+    with ``qr_every`` > 1 on a fast-mixing graph) makes the f32 Cholesky
+    non-finite; that step's re-orthonormalization is SKIPPED (the block
+    passes through unchanged) and the next one retries after the power
+    sweep re-mixes the columns. The skip predicate is computed on ``ell``
+    — a REPLICATED value (every chunk factors the same global G) — so all
+    chunks of a sharded run make the identical apply/skip decision; a
+    chunk-local test on the transformed rows could diverge per chunk and
+    silently mix QR'd and raw chunks of one global state. The guard costs
+    nothing on the healthy path — the selected values are bitwise the
+    factored ones.
+    """
+    g = op.sum(op.gram(v))                                       # (r, r)
+    ell = jnp.linalg.cholesky(g)
+    q = jax.scipy.linalg.solve_triangular(ell, v.T, lower=True).T
+    out = jnp.concatenate([v[:, :1], q[:, 1:]], axis=1)
+    return jnp.where(jnp.all(jnp.isfinite(ell)), out, v)
+
+
+def _power_loop(op, v0, eps, max_iter, mode, qr_every, snapshot_iters):
+    """The one convergence loop behind every embedding mode. Returns
+    (t, V, t_cols, done, snaps) with snaps (n_loc, r, S) holding the block
+    at each requested iteration count (S = len(snapshot_iters))."""
+    if mode not in ("pic", "orthogonal"):
+        raise ValueError(
+            f"unknown power-loop mode {mode!r} (expected 'pic' or "
+            "'orthogonal'; 'ensemble' is ensemble_power_iteration)")
+    if qr_every < 1:
+        raise ValueError(f"qr_every must be >= 1, got {qr_every}")
+    op = as_operator(op)
+    r = v0.shape[1]
+    block = mode == "orthogonal" and r > 1
+
+    def cond(state):
+        t, _v, _delta, done, _t_cols, _snaps = state
+        return jnp.logical_and(t < max_iter, jnp.logical_not(jnp.all(done)))
+
+    def body(state):
+        t, v, delta, done, t_cols, snaps = state
+        u = op.matmat(v)                                        # (n_loc, r)
+        l1 = op.sum(jnp.sum(jnp.abs(u), axis=0))                # (r,)
+        v_next = u / jnp.maximum(l1, 1e-30)[None, :]
+        if block:
+            if qr_every == 1:
+                v_next = orthonormalize_block(op, v_next)
+            else:
+                v_next = jax.lax.cond(
+                    (t + 1) % qr_every == 0,
+                    lambda vv: orthonormalize_block(op, vv),
+                    lambda vv: vv, v_next)
+        delta_next = jnp.abs(v_next - v)
+        accel = op.max(jnp.max(jnp.abs(delta_next - delta), axis=0))  # (r,)
+        # columns already done are frozen: keep prior value/delta, don't
+        # count the iteration; columns converging NOW keep this update
+        # (the per-vector loop applies the converging step before stopping).
+        # In block mode only the pinned column 0 freezes — the QR-coupled
+        # columns keep iterating (done latches the first crossing).
+        freeze = done & (jnp.arange(r) == 0) if block else done
+        v_next = jnp.where(freeze[None, :], v, v_next)
+        delta_next = jnp.where(freeze[None, :], delta, delta_next)
+        t_cols = t_cols + jnp.where(done, 0, 1).astype(jnp.int32)
+        done = jnp.logical_or(done, accel <= eps)
+        for j, s in enumerate(snapshot_iters):
+            snaps = snaps.at[:, :, j].set(
+                jnp.where(t + 1 == s, v_next, snaps[:, :, j]))
+        return t + 1, v_next, delta_next, done, t_cols, snaps
+
+    state = (
+        jnp.int32(0), v0, v0,                      # delta_0 <- v_0 (line 1)
+        jnp.zeros((r,), bool), jnp.zeros((r,), jnp.int32),
+        jnp.zeros(v0.shape + (len(snapshot_iters),), v0.dtype),
+    )
+    t, v, _delta, done, t_cols, snaps = jax.lax.while_loop(cond, body, state)
+    return t, v, t_cols, done, snaps
+
+
+def batched_power_iteration(op, v0, eps, max_iter, *, mode="pic",
+                            qr_every=1):
     """Run the truncated power iteration on batched state.
 
     Args:
@@ -75,6 +198,10 @@ def batched_power_iteration(op, v0, eps, max_iter):
         global (n, r) state (the whole state on a single device).
       eps: the paper's acceleration threshold (typically 1e-5 / n).
       max_iter: iteration cap.
+      mode: 'pic' (classic per-column loop, frozen columns) or
+        'orthogonal' (block iteration, column 0 pinned — see module doc).
+        With r = 1 both modes are the identical classic loop, bitwise.
+      qr_every: re-orthonormalization period in sweeps ('orthogonal' only).
 
     Returns:
       (V, t_cols, done): final local (n_loc, r) state, per-column iteration
@@ -82,35 +209,83 @@ def batched_power_iteration(op, v0, eps, max_iter):
       counts/flags are replicated across chunks; gather V with
       ``op.all_gather`` if the full embedding is needed.
     """
-    op = as_operator(op)
-    r = v0.shape[1]
-
-    def cond(state):
-        t, _v, _delta, done, _t_cols = state
-        return jnp.logical_and(t < max_iter, jnp.logical_not(jnp.all(done)))
-
-    def body(state):
-        t, v, delta, done, t_cols = state
-        u = op.matmat(v)                                        # (n_loc, r)
-        l1 = op.sum(jnp.sum(jnp.abs(u), axis=0))                # (r,)
-        v_next = u / jnp.maximum(l1, 1e-30)[None, :]
-        delta_next = jnp.abs(v_next - v)
-        accel = op.max(jnp.max(jnp.abs(delta_next - delta), axis=0))  # (r,)
-        # columns already done are frozen: keep prior value/delta, don't
-        # count the iteration; columns converging NOW keep this update
-        # (the per-vector loop applies the converging step before stopping)
-        v_next = jnp.where(done[None, :], v, v_next)
-        delta_next = jnp.where(done[None, :], delta, delta_next)
-        t_cols = t_cols + jnp.where(done, 0, 1).astype(jnp.int32)
-        done = jnp.logical_or(done, accel <= eps)
-        return t + 1, v_next, delta_next, done, t_cols
-
-    state = (
-        jnp.int32(0), v0, v0,                      # delta_0 <- v_0 (line 1)
-        jnp.zeros((r,), bool), jnp.zeros((r,), jnp.int32),
-    )
-    _t, v, _delta, done, t_cols = jax.lax.while_loop(cond, body, state)
+    _t, v, t_cols, done, _snaps = _power_loop(
+        op, v0, eps, max_iter, mode, qr_every, ())
     return v, t_cols, done
+
+
+def default_snapshot_iters(max_iter, n_snapshots=4):
+    """Geometrically spaced diffusion times max_iter/2^(S-1-j), ascending,
+    deduplicated — the default ensemble schedule."""
+    iters: list[int] = []
+    for j in range(n_snapshots):
+        t = max(1, max_iter // (2 ** (n_snapshots - 1 - j)))
+        if not iters or t > iters[-1]:
+            iters.append(t)
+    return tuple(iters)
+
+
+def ensemble_power_iteration(op, v0, eps, max_iter, *,
+                             snapshot_iters: Sequence[int] | None = None):
+    """Diffusion-time ensemble: the classic mode='pic' loop, with the block
+    captured at each of ``snapshot_iters`` (static, ascending; default
+    geometric in ``max_iter``). Per-column freezing means the state is
+    constant once every column has converged, so snapshots past an early
+    exit are backfilled with the final (frozen) block — no extra sweeps.
+
+    Returns (snaps, t_cols, done, v): the (n_loc, r, S) snapshot stack plus
+    the loop's ACTUAL final state v (== snaps[:, :, -1] whenever the last
+    snapshot time is max_iter or past the exit; later if a custom schedule
+    ends before convergence). Flatten snaps to the k-means embedding with
+    :func:`ensemble_embedding`.
+    """
+    snapshot_iters = tuple(
+        int(s) for s in (snapshot_iters if snapshot_iters is not None
+                         else default_snapshot_iters(max_iter)))
+    if not snapshot_iters or list(snapshot_iters) != sorted(
+            set(snapshot_iters)):
+        raise ValueError(
+            f"snapshot_iters must be non-empty strictly ascending ints, "
+            f"got {snapshot_iters!r}")
+    if snapshot_iters[0] < 1 or snapshot_iters[-1] > max_iter:
+        raise ValueError(
+            f"snapshot_iters {snapshot_iters!r} must lie in [1, max_iter="
+            f"{max_iter}]")
+    t, v, t_cols, done, snaps = _power_loop(
+        op, v0, eps, max_iter, "pic", 1, snapshot_iters)
+    written = jnp.asarray(snapshot_iters, jnp.int32) <= t         # (S,)
+    snaps = jnp.where(written[None, None, :], snaps, v[:, :, None])
+    return snaps, t_cols, done, v
+
+
+def run_power_embedding(op, v0, eps, max_iter, *, embedding="pic",
+                        qr_every=1, snapshot_iters=None):
+    """Run the engine in the requested embedding mode — the one helper every
+    entry point (local, sharded, oracle) calls, so mode routing exists once.
+
+    Returns (v, t_cols, done, emb): the final local (n_loc, r) state, the
+    per-column stats, and the LOCAL chunk of the matrix to cluster (the
+    state itself for 'pic'/'orthogonal'; the (n_loc, r·S) snapshot
+    concatenation for 'ensemble').
+    """
+    if embedding not in EMBEDDINGS:
+        raise ValueError(
+            f"unknown embedding {embedding!r} (expected one of {EMBEDDINGS})")
+    if embedding == "ensemble":
+        snaps, t_cols, done, v = ensemble_power_iteration(
+            op, v0, eps, max_iter, snapshot_iters=snapshot_iters)
+        return v, t_cols, done, ensemble_embedding(snaps)
+    v, t_cols, done = batched_power_iteration(
+        op, v0, eps, max_iter, mode=embedding, qr_every=qr_every)
+    return v, t_cols, done, v
+
+
+def ensemble_embedding(snaps):
+    """Flatten an (n, r, S) snapshot stack to the (n, r·S) k-means
+    embedding (column order c·S + s — the ONE canonical layout both the
+    local and sharded paths use, so their embeddings agree column-for-
+    column)."""
+    return snaps.reshape(snaps.shape[0], -1)
 
 
 def random_start_vectors(krand, n, n_vectors, dtype=jnp.float32):

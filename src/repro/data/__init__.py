@@ -1,4 +1,5 @@
 from .synthetic import (
+    anisotropic,
     cassini,
     dataset_by_name,
     gaussians,
@@ -11,6 +12,7 @@ from .synthetic import (
 __all__ = [
     "two_moons",
     "three_circles",
+    "anisotropic",
     "cassini",
     "gaussians",
     "shapes",

@@ -70,6 +70,23 @@ def cassini(n: int, *, seed: int = 0):
     return np.concatenate(xs).astype(np.float32), np.concatenate(ys)
 
 
+def anisotropic(n: int, *, seed: int = 0):
+    """Three stretched (sheared) Gaussian blobs — the classic k-means
+    failure case: isotropic distance misassigns the elongated tails, while
+    affinity-graph methods follow the stretch. Used by the
+    embedding-quality regression suite (tests/test_embedding_quality.py)."""
+    rng = np.random.default_rng(seed)
+    counts = _split_counts(n, 3)
+    shear = np.array([[0.6, -0.6], [-0.4, 0.8]])
+    centers = [(-2.5, 1.5), (0.0, -1.0), (2.5, 2.0)]
+    xs, ys = [], []
+    for cls, (cnt, center) in enumerate(zip(counts, centers)):
+        pts = rng.normal(0.0, 0.45, (cnt, 2)) @ shear + np.array(center)
+        xs.append(pts)
+        ys.append(np.full(cnt, cls, np.int32))
+    return np.concatenate(xs).astype(np.float32), np.concatenate(ys)
+
+
 def gaussians(n: int, *, k: int = 4, spread: float = 0.35, seed: int = 0):
     """k well-separated isotropic Gaussian blobs on a circle."""
     rng = np.random.default_rng(seed)
@@ -131,6 +148,7 @@ def smiley(n: int, *, seed: int = 0):
 _REGISTRY = {
     "two_moons": (two_moons, 2),
     "three_circles": (three_circles, 3),
+    "anisotropic": (anisotropic, 3),
     "cassini": (cassini, 3),
     "gaussians": (gaussians, 4),
     "shapes": (shapes, 4),

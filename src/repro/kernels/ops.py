@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .affinity import affinity_and_degree as _affinity_pallas
+from .gram import gram as _gram_pallas
 from .kmeans_assign import kmeans_assign as _assign_pallas
 from .power_step import degree_normalized_matmat as _dnmm_pallas
 from .power_step import degree_normalized_matvec as _dnmv_pallas
@@ -131,6 +132,8 @@ register("streaming_degree", "streaming")(_degree_streaming)
 register("streaming_degree", "reference")(ref.affinity_degree_streaming_ref)
 register("power_step", "pallas")(_power_pallas)
 register("power_step", "reference")(ref.power_step_ref)
+register("gram", "pallas")(_gram_pallas)
+register("gram", "reference")(ref.gram_ref)
 register("kmeans_assign", "pallas")(_assign_pallas)
 register("kmeans_assign", "reference")(ref.kmeans_assign_ref)
 
@@ -253,6 +256,17 @@ def power_step(a, v, d, *, tm=None, tn=None, force_reference=False,
     return dispatch("power_step", mode)(
         a, v, d, tm=tm, tn=tn, interpret=_interpret()
     )
+
+
+def gram(v, *, tm=512, force_reference=False, mode=None):
+    """G = VᵀV for the tall-skinny (n, r) engine state — the reduction that
+    prices the block re-orthonormalization (DESIGN.md §10). One HBM sweep
+    of V, f32 accumulation. Sharded callers compute the LOCAL chunk's Gram
+    here and finish with the operator's ``sum`` primitive."""
+    mode = _resolve_mode(mode, force_reference)
+    if mode == "reference":
+        return ref.gram_ref(v)
+    return dispatch("gram", mode)(v, tm=tm, interpret=_interpret())
 
 
 def kmeans_assign(x, cents, *, tm=512, force_reference=False, mode=None):

@@ -87,6 +87,12 @@ def affinity_degree_streaming_ref(
     return deg
 
 
+def gram_ref(v: jax.Array) -> jax.Array:
+    """Oracle for kernels.gram.gram: G = VᵀV in f32."""
+    v32 = v.astype(jnp.float32)
+    return v32.T @ v32
+
+
 def power_step_ref(a: jax.Array, v: jax.Array, d: jax.Array) -> jax.Array:
     """Oracle for kernels.power_step.power_step."""
     u = degree_normalized_matvec_ref(a, v, d)

@@ -67,28 +67,29 @@ class TestAffinity:
 
 class TestPICBehaviour:
     @pytest.mark.parametrize(
-        "gen,k,sigma",
+        "gen,k,sigma,n_vectors,embedding",
         [
-            pytest.param(
-                three_circles, 3, 0.3,
-                marks=pytest.mark.xfail(
-                    reason="pre-existing at seed: the 1-D PIC embedding "
-                    "collapses two of the three concentric circles "
-                    "(ARI 0.811); multi-vector random restarts measured "
-                    "worse (0.50-0.61) — needs an embedding-quality fix, "
-                    "not an engine fix", strict=False),
-            ),
-            (cassini, 3, 0.3),
-            (gaussians, 4, 0.3),
-            (shapes, 4, 0.3),
-            (smiley, 4, 0.15),
+            # xfail'd PR 1 → passing PR 3: the 1-D PIC embedding collapses
+            # two of the three concentric circles (ARI 0.811) and
+            # multi-vector random restarts measured worse (0.50-0.61); the
+            # orthogonalized 2-column block embedding (DESIGN.md §10)
+            # separates all three (ARI 1.0) — the embedding-quality fix
+            # the xfail note asked for. The classic-embedding floor for
+            # this dataset is tracked in tests/test_embedding_quality.py.
+            (three_circles, 3, 0.3, 2, "orthogonal"),
+            (cassini, 3, 0.3, 1, "pic"),
+            (gaussians, 4, 0.3, 1, "pic"),
+            (shapes, 4, 0.3, 1, "pic"),
+            (smiley, 4, 0.15, 1, "pic"),
         ],
     )
-    def test_clusters_separable_datasets(self, gen, k, sigma):
+    def test_clusters_separable_datasets(self, gen, k, sigma, n_vectors,
+                                         embedding):
         x, y = gen(480, seed=0)
         res = pic_reference(
             jnp.asarray(x), k, key=jax.random.key(1),
             affinity_kind="rbf", sigma=sigma, max_iter=400,
+            n_vectors=n_vectors, embedding=embedding,
         )
         ari = adjusted_rand_index(y, np.asarray(res.labels))
         assert ari >= 0.9, f"ARI {ari:.3f} too low"

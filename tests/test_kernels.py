@@ -124,6 +124,46 @@ class TestKmeansAssignKernel:
         assert match > 0.99  # bf16 ties may flip; near-total agreement required
 
 
+class TestGramKernel:
+    @pytest.mark.parametrize("n,r", [(64, 1), (100, 2), (300, 4), (517, 8),
+                                     (1024, 3), (200, 16)])
+    def test_shape_sweep(self, n, r):
+        v = jax.random.uniform(jax.random.key(n + r), (n, r)) - 0.3
+        g_k = ops.gram(v)
+        g_r = ref.gram_ref(v)
+        assert g_k.shape == (r, r) and g_k.dtype == jnp.float32
+        np.testing.assert_allclose(g_k, g_r, atol=1e-5, rtol=1e-5)
+
+    @pytest.mark.parametrize("tm", [128, 256, 512])
+    def test_tile_sweep(self, tm):
+        v = jax.random.normal(jax.random.key(0), (700, 4))
+        np.testing.assert_allclose(ops.gram(v, tm=tm), ref.gram_ref(v),
+                                   atol=1e-4, rtol=1e-5)
+
+    def test_symmetric_and_psd_diag(self):
+        v = jax.random.normal(jax.random.key(1), (333, 5))
+        g = np.asarray(ops.gram(v))
+        np.testing.assert_allclose(g, g.T, atol=1e-5)
+        assert (np.diag(g) >= 0).all()
+
+    def test_f32_accumulation_from_bf16_state(self):
+        v = jax.random.uniform(jax.random.key(2), (400, 3))
+        g16 = ops.gram(v.astype(jnp.bfloat16))
+        assert g16.dtype == jnp.float32
+        np.testing.assert_allclose(g16, ref.gram_ref(v), atol=2e-2, rtol=2e-2)
+
+    def test_chunked_partials_sum_to_full(self):
+        """The sharded contract: per-chunk Grams summed across chunks equal
+        the full Gram (what op.sum(op.gram(v_loc)) computes under psum)."""
+        v = jax.random.normal(jax.random.key(3), (512, 4))
+        chunks = [ops.gram(v[i * 64:(i + 1) * 64]) for i in range(8)]
+        np.testing.assert_allclose(sum(chunks), ref.gram_ref(v),
+                                   atol=1e-4, rtol=1e-5)
+
+    def test_registry_modes(self):
+        assert set(ops.modes_for("gram")) == {"pallas", "reference"}
+
+
 class TestKernelProperties:
     @settings(max_examples=25, deadline=None)
     @given(

@@ -8,8 +8,10 @@ from hypothesis import strategies as st
 
 from repro.core import (
     affinity_matrix,
+    as_operator,
     gpic,
     gpic_matrix_free,
+    orthonormalize_block,
     pic_from_affinity,
     row_normalize_features,
 )
@@ -81,6 +83,58 @@ class TestAlgebraicInvariants:
         xn = row_normalize_features(x)
         d = degree_matrix_free(xn, "cosine_shifted")
         assert float(jnp.min(d)) > 0.0
+
+
+class TestBlockOrthogonalization:
+    """Properties of the orthogonal embedding mode (DESIGN.md §10)."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(16, 300), r=st.integers(2, 8), seed=st.integers(0, 99))
+    def test_qr_step_leaves_block_orthonormal(self, n, r, seed):
+        """After the pinned Cholesky-QR, [v0/||v0||_2, cols 1..r-1] must be
+        orthonormal to 1e-5 — column 0 is only ever un-normalized, never
+        un-orthogonal."""
+        v = jax.random.uniform(jax.random.key(seed), (n, r)) + 0.05
+        v = v / jnp.sum(jnp.abs(v), axis=0, keepdims=True)   # engine scale
+        out = orthonormalize_block(as_operator(lambda x: x), v)
+        np.testing.assert_array_equal(np.asarray(out[:, 0]),
+                                      np.asarray(v[:, 0]))   # pinned bitwise
+        q0 = out[:, :1] / jnp.linalg.norm(out[:, 0])
+        q = jnp.concatenate([q0, out[:, 1:]], axis=1)
+        np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(r), atol=1e-5)
+
+    # n from a small menu: every distinct n recompiles both jitted
+    # pipelines, and the property lives in the loop logic, not the shape
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.sampled_from((24, 64, 101, 160)), seed=st.integers(0, 50))
+    def test_orthogonal_r1_is_bitwise_classic(self, n, seed):
+        """embedding='orthogonal' with r=1 IS the classic PIC loop — same
+        floats, same iteration counts, not merely close."""
+        x = _points(n, 2, seed)
+        kw = dict(key=jax.random.key(0), affinity_kind="cosine_shifted",
+                  max_iter=30, use_pallas=False)
+        rp = gpic(x, 2, embedding="pic", **kw)
+        ro = gpic(x, 2, embedding="orthogonal", **kw)
+        np.testing.assert_array_equal(np.asarray(rp.embeddings),
+                                      np.asarray(ro.embeddings))
+        assert int(rp.n_iter) == int(ro.n_iter)
+        assert bool(rp.converged) == bool(ro.converged)
+
+    @settings(max_examples=8, deadline=None)
+    @given(n=st.sampled_from((32, 96, 150)), seed=st.integers(0, 30))
+    def test_orthogonal_pins_column0_to_classic_trajectory(self, n, seed):
+        """Deflation pinning: with r > 1 the block's column 0 still follows
+        the classic degree-seeded trajectory bitwise (the QR never touches
+        it, the sweep is column-independent, and its freeze rule is the
+        classic one)."""
+        x = _points(n, 2, seed)
+        kw = dict(key=jax.random.key(1), affinity_kind="cosine_shifted",
+                  max_iter=40, use_pallas=False, n_vectors=4)
+        rp = gpic(x, 3, embedding="pic", **kw)
+        ro = gpic(x, 3, embedding="orthogonal", **kw)
+        np.testing.assert_array_equal(np.asarray(rp.embedding),
+                                      np.asarray(ro.embedding))
+        assert int(rp.n_iter) == int(ro.n_iter)
 
 
 class TestScaleInvariance:

@@ -103,6 +103,59 @@ def test_parity_matrix_free():
 
 
 @pytest.mark.slow
+def test_parity_embedding_modes():
+    """The ISSUE 3 parity case: the orthogonal (block-QR) and ensemble
+    (diffusion-snapshot) embedding modes produce IDENTICAL labels and
+    per-column iteration counts on the 8-device mesh vs single device, for
+    all three engines — the QR's Gram partials reduce through the
+    operator's psum binding and snapshots gather once after the loop, so
+    the sharded block algebra IS the single-device one. The result also
+    records which embedding mode produced its matrix (PICResult
+    .embedding_mode), asserted on both sides.
+
+    Config notes: r values are pinned per engine where the later columns'
+    eps-crossing is reduction-order robust (the same well-conditioned-data
+    discipline as the classic parity suite, DESIGN.md §9/§10); the
+    matrix-free psum ordering makes its r∈{1,2} ensemble crossings
+    boundary-sensitive, so it runs r=4.
+    """
+    out = _run_in_subprocess(
+        """
+        x, _ = gaussians(512, k=3, seed=0)
+        k = 3
+        xs = shard_points(x, mesh, "data")
+        combos = [("explicit", "rbf", "orthogonal", 2),
+                  ("streaming", "rbf", "orthogonal", 2),
+                  ("streaming", "rbf", "orthogonal", 4),
+                  ("matrix_free", "cosine_shifted", "orthogonal", 2),
+                  ("matrix_free", "cosine_shifted", "orthogonal", 4),
+                  ("explicit", "rbf", "ensemble", 2),
+                  ("streaming", "rbf", "ensemble", 2),
+                  ("matrix_free", "cosine_shifted", "ensemble", 4)]
+        for path, kind, emb, r in combos:
+            cfg = GPICConfig(engine=path, affinity_kind=kind, sigma=0.3,
+                             n_vectors=r, max_iter=100, embedding=emb)
+            key = jax.random.key(1)
+            sd = run_gpic(jnp.asarray(x), k, cfg, key=key)
+            dist = run_gpic(xs, k, cfg.with_(mesh=mesh), key=key)
+            assert sd.embedding_mode == emb, (path, emb, r, "sd mode")
+            assert dist.embedding_mode == emb, (path, emb, r, "dist mode")
+            assert sd.embeddings.shape == dist.embeddings.shape, (
+                path, emb, r, sd.embeddings.shape, dist.embeddings.shape)
+            assert (np.asarray(sd.labels) == np.asarray(dist.labels)).all(), (
+                path, emb, r, "labels diverged")
+            assert (np.asarray(sd.n_iter_cols)
+                    == np.asarray(dist.n_iter_cols)).all(), (
+                path, emb, r, np.asarray(sd.n_iter_cols),
+                np.asarray(dist.n_iter_cols))
+            print("OK", path, emb, "r=", r,
+                  "iters=", np.asarray(dist.n_iter_cols).tolist())
+        """
+    )
+    assert out.count("OK") == 8
+
+
+@pytest.mark.slow
 def test_streaming_ring_is_a_free():
     """The sharded streaming path's jaxpr contains no value as large as
     even one device's (n/P, n) affinity stripe — A is never materialized
