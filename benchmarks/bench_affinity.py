@@ -1,0 +1,118 @@
+"""Affinity-graph subsystem benchmark (ISSUE 5 acceptance evidence).
+
+Sections (all at r ∈ {1, 4} where a sweep is involved):
+
+  affinity/build/<spec>          two-pass graph build wall time (pass-1
+                                 row-top-k statistics + masked A+D build)
+                                 for the dense, kNN, and adaptive+kNN specs
+                                 — the 88.6 %-of-runtime stage (PAPER §4.2)
+  affinity/sweep/<spec>/r=<r>    ONE explicit degree-normalized sweep on
+                                 the built graph; the derived column
+                                 records nnz/row — dense storage keeps the
+                                 sweep cost flat, the recorded sparsity is
+                                 the headroom a sparse format unlocks on
+                                 real TPU (ROADMAP follow-up)
+  affinity/moons/<spec>          end-to-end run_gpic on two_moons(480) at
+                                 sigma 0.25: ARI + sweep count — the
+                                 quality acceptance (dense ~0.5, kNN 1.0)
+  affinity/residual_stop         orthogonal mode on three_circles with and
+                                 without residual_tol; ASSERTS the
+                                 sweep-count reduction (the ROADMAP
+                                 stopping-rule item) and the bitwise pin
+                                 of column 0 on every run
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only affinity
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    AffinitySpec,
+    GPICConfig,
+    adjusted_rand_index,
+    run_gpic,
+)
+from repro.core.graph import affinity_stats
+from repro.data import three_circles, two_moons
+from repro.kernels import ops
+
+from .common import csv_row, time_fn
+
+SPECS = (
+    ("dense", AffinitySpec(kind="rbf", sigma=0.25)),
+    ("knn30", AffinitySpec(kind="rbf", sigma=0.25, knn_k=30)),
+    ("ad+knn10", AffinitySpec(kind="rbf", bandwidth="adaptive",
+                              scale_k=7, knn_k=10)),
+)
+
+
+def _build(x, spec):
+    scale, thr = affinity_stats(x, spec)
+    return ops.affinity_and_degree(x, spec=spec, scale_r=scale,
+                                   scale_c=scale, thr=thr)
+
+
+def run(n=1024, moons_n=480, max_iter=400):
+    rows = []
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(n, 2)),
+                    jnp.float32)
+
+    # --- two-pass build + per-sweep cost, dense vs truncated -------------
+    built = {}
+    for tag, spec in SPECS:
+        t_build, (a, d) = time_fn(_build, x, spec)
+        nnz = float((np.asarray(a) != 0.0).sum(axis=1).mean())
+        built[tag] = (a, d)
+        rows.append(csv_row(f"affinity/build/{tag}", t_build,
+                            f"n={n} nnz_per_row={nnz:.1f}"))
+        for r in (1, 4):
+            v = jax.random.uniform(jax.random.key(r), (n, r))
+            t_sweep, _ = time_fn(
+                lambda a=a, v=v, d=d: ops.degree_normalized_matmat(a, v, d))
+            rows.append(csv_row(
+                f"affinity/sweep/{tag}/r={r}", t_sweep,
+                f"nnz_frac={nnz / n:.3f} dense_storage=1"))
+
+    # --- quality: the two_moons acceptance -------------------------------
+    xm, ym = two_moons(moons_n, seed=0)
+    xmj = jnp.asarray(xm)
+    for tag, spec in SPECS:
+        cfg = GPICConfig(affinity=spec, max_iter=max_iter, n_vectors=2,
+                         embedding="orthogonal")
+        t, res = time_fn(run_gpic, xmj, 2, cfg, key=jax.random.key(1))
+        ari = adjusted_rand_index(ym, np.asarray(res.labels))
+        rows.append(csv_row(
+            f"affinity/moons/{tag}", t,
+            f"ari={ari:.3f} n_iter={int(res.n_iter)} "
+            f"iters={np.asarray(res.n_iter_cols).tolist()}"))
+
+    # --- the subspace residual stopping rule (assert the reduction) ------
+    xc, yc = three_circles(moons_n, seed=0)
+    xcj = jnp.asarray(xc)
+    base = GPICConfig(affinity_kind="rbf", sigma=0.3, max_iter=max_iter,
+                      n_vectors=2, embedding="orthogonal")
+    t_full, full = time_fn(run_gpic, xcj, 3, base, key=jax.random.key(1))
+    t_res, res = time_fn(run_gpic, xcj, 3, base.with_(residual_tol=1e-3),
+                         key=jax.random.key(1))
+    sweeps_full = int(np.asarray(full.n_iter_cols).max())
+    sweeps_res = int(np.asarray(res.n_iter_cols).max())
+    assert sweeps_res < sweeps_full, (
+        f"residual stopping did not reduce sweeps: {sweeps_res} vs "
+        f"{sweeps_full}")
+    np.testing.assert_array_equal(
+        np.asarray(res.embedding), np.asarray(full.embedding),
+        err_msg="residual stopping perturbed the pinned column-0 trajectory")
+    ari_res = adjusted_rand_index(yc, np.asarray(res.labels))
+    rows.append(csv_row(
+        "affinity/residual_stop", t_res,
+        f"sweeps={sweeps_res} vs_max_iter={sweeps_full} ari={ari_res:.3f} "
+        f"col0_bitwise=1"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

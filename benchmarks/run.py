@@ -34,14 +34,15 @@ def main() -> None:
                     help="paper-scale sizes (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,table2,fig3,exp2,"
-                         "roofline,multivec,distributed,quality")
-    ap.add_argument("--json", nargs="?", const="BENCH_PR3.json", default=None,
+                         "roofline,multivec,distributed,quality,affinity")
+    ap.add_argument("--json", nargs="?", const="BENCH_PR5.json", default=None,
                     metavar="PATH",
-                    help="write a JSON perf snapshot (default BENCH_PR3.json)")
+                    help="write a JSON perf snapshot (default BENCH_PR5.json)")
     args = ap.parse_args()
 
-    from . import (bench_distributed, bench_exp2, bench_fig3, bench_multivec,
-                   bench_quality, bench_table1, bench_table2, roofline)
+    from . import (bench_affinity, bench_distributed, bench_exp2, bench_fig3,
+                   bench_multivec, bench_quality, bench_table1, bench_table2,
+                   roofline)
 
     jobs = {
         "table1": lambda: bench_table1.run(
@@ -64,6 +65,12 @@ def main() -> None:
         "quality": lambda: bench_quality.run(
             n=960 if args.full else 480,
             qr_n=2048 if args.full else 1024),
+        # the affinity-graph subsystem: two-pass build + sweep cost dense
+        # vs truncated, the two_moons kNN acceptance, and the subspace
+        # residual stopping rule (reduction asserted on every run)
+        "affinity": lambda: bench_affinity.run(
+            n=2048 if args.full else 1024,
+            moons_n=960 if args.full else 480),
     }
     selected = (args.only.split(",") if args.only else list(jobs))
 

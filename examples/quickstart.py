@@ -9,7 +9,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GPICConfig, adjusted_rand_index, jaccard_index, run_gpic
+from repro.core import (
+    AffinitySpec,
+    GPICConfig,
+    adjusted_rand_index,
+    jaccard_index,
+    run_gpic,
+)
 from repro.data import dataset_by_name
 
 
@@ -48,6 +54,36 @@ def main():
                      key=jax.random.key(1))
     same = bool((np.asarray(res_e.labels) == np.asarray(res_s.labels)).all())
     print(f"  three_circles explicit vs streaming: labels identical={same}")
+
+    print("\naffinity-graph specs (DESIGN.md §11) — two_moons at sigma "
+          "0.25, the dataset every dense mode leaves marginal (~0.5):")
+    x, y, k = dataset_by_name("two_moons", 1200, seed=0)
+    for tag, spec, rt in (
+            ("dense rbf", AffinitySpec(kind="rbf", sigma=0.25), None),
+            # knn_k ~ n/16 tracks the arc density (30 at n=480, 75 here);
+            # residual_tol stops the block at subspace convergence instead
+            # of max_iter
+            ("kNN-truncated (k=n/16)",
+             AffinitySpec(kind="rbf", sigma=0.25, knn_k=75), 1e-3)):
+        cfg = GPICConfig(affinity=spec, max_iter=400, n_vectors=2,
+                         embedding="orthogonal", residual_tol=rt)
+        res = run_gpic(jnp.asarray(x), k, cfg, key=jax.random.key(1))
+        ari = adjusted_rand_index(y, np.asarray(res.labels))
+        print(f"  {tag:24s} ARI={ari:.3f} "
+              f"iters={np.asarray(res.n_iter_cols).tolist()}")
+
+    print("\nadaptive local scaling — self-tuning bandwidths, NO sigma "
+          "to choose (exp(-d^2/(s_i s_j)) from each point's scale_k-th "
+          "neighbor):")
+    spec = AffinitySpec(kind="rbf", bandwidth="adaptive", scale_k=25,
+                        knn_k=75)
+    for name in ("gaussians", "cassini"):
+        x, y, k = dataset_by_name(name, 1200, seed=0)
+        cfg = GPICConfig(affinity=spec, max_iter=400, n_vectors=2,
+                         embedding="orthogonal")
+        res = run_gpic(jnp.asarray(x), k, cfg, key=jax.random.key(1))
+        ari = adjusted_rand_index(y, np.asarray(res.labels))
+        print(f"  {name:15s} adaptive+kNN ARI={ari:.3f}")
 
     print("\nmatrix-free GPIC (beyond-paper O2) at n=100,000:")
     x, y, k = dataset_by_name("gaussians", 100_000, seed=0)

@@ -47,7 +47,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .affinity import AffinityKind
+from .affinity import AffinityKind, AffinitySpec, as_affinity_spec
 from .kmeans import kmeans
 from .operators import (
     _axis_tuple,
@@ -76,7 +76,7 @@ def _local_slice(idx, n_loc, arr):
 
 def _run_sharded(op, axes, *, key, u0t, k, eps, max_iter, kmeans_iters,
                  embedding="pic", qr_every=1, snapshot_iters=None,
-                 force_reference=False):
+                 residual_tol=None, force_reference=False):
     """Seed the local engine state from the operator's degrees, run THE
     convergence engine, gather once, and k-means the replicated embedding.
 
@@ -96,7 +96,7 @@ def _run_sharded(op, axes, *, key, u0t, k, eps, max_iter, kmeans_iters,
         op.degree, u0t_loc, sum_fn=op.sum, dtype=jnp.float32)
     v_loc, t_cols, done, emb_loc = run_power_embedding(
         op, v0_loc, eps, max_iter, embedding=embedding, qr_every=qr_every,
-        snapshot_iters=snapshot_iters)
+        snapshot_iters=snapshot_iters, residual_tol=residual_tol)
     emb_full = op.all_gather(emb_loc)                   # once, after the loop
     v_full = emb_full if emb_loc is v_loc else op.all_gather(v_loc)
     emb = standardize_columns(emb_full)
@@ -108,9 +108,10 @@ def _run_sharded(op, axes, *, key, u0t, k, eps, max_iter, kmeans_iters,
 @functools.partial(
     jax.jit,
     static_argnames=("k", "mesh", "shard_axes", "max_iter", "kmeans_iters",
-                     "affinity_kind", "sigma", "eps_scale", "a_dtype",
-                     "fold_shift", "n_vectors", "engine", "tile",
-                     "use_pallas", "embedding", "qr_every", "snapshot_iters"),
+                     "affinity_kind", "sigma", "affinity", "eps_scale",
+                     "a_dtype", "fold_shift", "n_vectors", "engine", "tile",
+                     "use_pallas", "embedding", "qr_every", "snapshot_iters",
+                     "residual_tol"),
 )
 def distributed_gpic(
     x: jax.Array,
@@ -124,6 +125,7 @@ def distributed_gpic(
     kmeans_iters: int = 25,
     affinity_kind: AffinityKind = "cosine_shifted",
     sigma: float = 1.0,
+    affinity: AffinitySpec | None = None,
     a_dtype=jnp.float32,
     fold_shift: bool = False,
     n_vectors: int = 1,
@@ -133,6 +135,7 @@ def distributed_gpic(
     embedding: str = "pic",
     qr_every: int = 1,
     snapshot_iters: tuple | None = None,
+    residual_tol: float | None = None,
 ) -> PICResult:
     """Sharded GPIC on the Pallas kernels (paper-faithful math, row stripes).
 
@@ -158,19 +161,20 @@ def distributed_gpic(
     n = x.shape[0]
     eps = eps_scale / n
     mesh_size = _mesh_size(mesh, axes)
+    spec = as_affinity_spec(affinity, kind=affinity_kind, sigma=sigma)
+    spec.validate_for_n(n)
     kkm, krand = jax.random.split(key)
     u0t = random_start_vectors(krand, n, n_vectors)
 
     def fn(x_loc, key, u0t):
         if engine == "explicit":
             op = sharded_explicit_operator(
-                x_loc, axes=axes, kind=affinity_kind, sigma=sigma,
-                a_dtype=a_dtype, fold_shift=fold_shift, tile=tile,
-                use_pallas=use_pallas)
+                x_loc, axes=axes, spec=spec, a_dtype=a_dtype,
+                fold_shift=fold_shift, tile=tile, use_pallas=use_pallas)
         elif engine == "streaming":
             op = sharded_streaming_operator(
-                x_loc, axes=axes, mesh_size=mesh_size, kind=affinity_kind,
-                sigma=sigma, tile=tile, use_pallas=use_pallas)
+                x_loc, axes=axes, mesh_size=mesh_size, spec=spec,
+                tile=tile, use_pallas=use_pallas)
         else:
             raise ValueError(f"unknown engine {engine!r} "
                              "(expected 'explicit' or 'streaming')")
@@ -178,6 +182,7 @@ def distributed_gpic(
                             max_iter=max_iter, kmeans_iters=kmeans_iters,
                             embedding=embedding, qr_every=qr_every,
                             snapshot_iters=snapshot_iters,
+                            residual_tol=residual_tol,
                             force_reference=not use_pallas)
 
     out = shard_map(
@@ -194,8 +199,9 @@ def distributed_gpic(
 @functools.partial(
     jax.jit,
     static_argnames=("k", "mesh", "shard_axes", "max_iter", "kmeans_iters",
-                     "affinity_kind", "eps_scale", "n_vectors", "use_pallas",
-                     "embedding", "qr_every", "snapshot_iters"),
+                     "affinity_kind", "affinity", "eps_scale", "n_vectors",
+                     "use_pallas", "embedding", "qr_every", "snapshot_iters",
+                     "residual_tol"),
 )
 def distributed_gpic_matrix_free(
     x: jax.Array,
@@ -208,31 +214,36 @@ def distributed_gpic_matrix_free(
     max_iter: int = 50,
     kmeans_iters: int = 25,
     affinity_kind: AffinityKind = "cosine_shifted",
+    affinity: AffinitySpec | None = None,
     n_vectors: int = 1,
     use_pallas: bool = True,
     embedding: str = "pic",
     qr_every: int = 1,
     snapshot_iters: tuple | None = None,
+    residual_tol: float | None = None,
 ) -> PICResult:
     """Matrix-free distributed GPIC (O2): psum(m r) per step, scales to 1000s
-    of nodes. Cosine affinity kinds only (they factor; DESIGN.md §2)."""
+    of nodes. Factorable specs only (cosine kinds, no adaptive scaling or
+    truncation; DESIGN.md §2)."""
     axes = _axis_tuple(shard_axes)
     n = x.shape[0]
     eps = eps_scale / n
-    if affinity_kind not in ("cosine", "cosine_shifted"):
-        raise ValueError("matrix-free path needs a factorable affinity")
+    spec = as_affinity_spec(affinity, kind=affinity_kind)
+    if not spec.factorable:
+        raise ValueError(
+            f"matrix-free path needs a factorable affinity spec, got {spec}")
     kkm, krand = jax.random.split(key)
     u0t = random_start_vectors(krand, n, n_vectors)
 
     def fn(x_loc, key, u0t):
-        op = sharded_matrix_free_operator(x_loc, axes=axes,
-                                          kind=affinity_kind,
+        op = sharded_matrix_free_operator(x_loc, axes=axes, spec=spec,
                                           use_pallas=use_pallas)
         # the sweep itself is jnp either way; the flag still governs k-means
         return _run_sharded(op, axes, key=key, u0t=u0t, k=k, eps=eps,
                             max_iter=max_iter, kmeans_iters=kmeans_iters,
                             embedding=embedding, qr_every=qr_every,
                             snapshot_iters=snapshot_iters,
+                            residual_tol=residual_tol,
                             force_reference=not use_pallas)
 
     out = shard_map(

@@ -41,7 +41,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .affinity import AffinityKind, row_normalize_features
+from .affinity import (
+    AffinityKind,
+    AffinitySpec,
+    as_affinity_spec,
+    row_normalize_features,
+)
 from .kmeans import kmeans
 from .operators import (
     explicit_operator,
@@ -64,8 +69,8 @@ _truncated_power_iteration = batched_power_iteration
     jax.jit,
     static_argnames=(
         "k", "max_iter", "kmeans_iters", "affinity_kind", "sigma",
-        "n_vectors", "use_pallas", "tile", "engine", "a_dtype",
-        "embedding", "qr_every", "snapshot_iters",
+        "affinity", "n_vectors", "use_pallas", "tile", "engine", "a_dtype",
+        "embedding", "qr_every", "snapshot_iters", "residual_tol",
     ),
 )
 def gpic(
@@ -78,6 +83,7 @@ def gpic(
     kmeans_iters: int = 25,
     affinity_kind: AffinityKind = "cosine_shifted",
     sigma: float = 1.0,
+    affinity: AffinitySpec | None = None,
     n_vectors: int = 1,
     use_pallas: bool = True,
     tile: int | None = None,
@@ -86,26 +92,33 @@ def gpic(
     embedding: str = "pic",
     qr_every: int = 1,
     snapshot_iters: tuple | None = None,
+    residual_tol: float | None = None,
 ) -> PICResult:
     """Accelerated PIC via the multi-vector power engine.
 
-    ``tile=None`` lets the static autotuner pick the Pallas tile size;
-    ``use_pallas=False`` routes every op to the pure-jnp reference
+    ``affinity`` (an :class:`AffinitySpec`) selects the full
+    graph-construction policy — adaptive local scaling, kNN truncation
+    (DESIGN.md §11) — and takes precedence over the legacy
+    ``affinity_kind``/``sigma`` shorthand. ``residual_tol`` arms the
+    subspace residual stopping rule (embedding='orthogonal', DESIGN.md
+    §11). ``tile=None`` lets the static autotuner pick the Pallas tile
+    size; ``use_pallas=False`` routes every op to the pure-jnp reference
     implementations (same math, unfused HLO).
     """
     n = x.shape[0]
     if eps is None:
         eps = 1e-5 / n
+    spec = as_affinity_spec(affinity, kind=affinity_kind, sigma=sigma)
+    spec.validate_for_n(n)
 
-    inp = x if affinity_kind == "rbf" else row_normalize_features(x)
+    inp = x if spec.kind == "rbf" else row_normalize_features(x)
 
     if engine == "explicit":
-        op = explicit_operator(inp, kind=affinity_kind, sigma=sigma,
-                               a_dtype=a_dtype, tile=tile,
+        op = explicit_operator(inp, spec=spec, a_dtype=a_dtype, tile=tile,
                                use_pallas=use_pallas)
     elif engine == "streaming":
-        op = streaming_operator(inp, kind=affinity_kind, sigma=sigma,
-                                tile=tile, use_pallas=use_pallas)
+        op = streaming_operator(inp, spec=spec, tile=tile,
+                                use_pallas=use_pallas)
     else:
         raise ValueError(f"unknown engine {engine!r} "
                          "(expected 'explicit' or 'streaming')")
@@ -114,7 +127,7 @@ def gpic(
     v0 = init_power_vectors(krand, op.degree, n_vectors)
     v, t_cols, done, emb_raw = run_power_embedding(
         op, v0, eps, max_iter, embedding=embedding, qr_every=qr_every,
-        snapshot_iters=snapshot_iters)
+        snapshot_iters=snapshot_iters, residual_tol=residual_tol)
     emb = standardize_columns(emb_raw)
     labels, _ = kmeans(kkm, emb, k, iters=kmeans_iters,
                        force_reference=not use_pallas)
@@ -125,8 +138,8 @@ def gpic(
 @functools.partial(
     jax.jit,
     static_argnames=("k", "max_iter", "kmeans_iters", "affinity_kind",
-                     "n_vectors", "use_pallas", "embedding", "qr_every",
-                     "snapshot_iters"),
+                     "affinity", "n_vectors", "use_pallas", "embedding",
+                     "qr_every", "snapshot_iters", "residual_tol"),
 )
 def gpic_matrix_free(
     x: jax.Array,
@@ -137,13 +150,16 @@ def gpic_matrix_free(
     max_iter: int = 50,
     kmeans_iters: int = 25,
     affinity_kind: AffinityKind = "cosine_shifted",
+    affinity: AffinitySpec | None = None,
     n_vectors: int = 1,
     use_pallas: bool = True,
     embedding: str = "pic",
     qr_every: int = 1,
     snapshot_iters: tuple | None = None,
+    residual_tol: float | None = None,
 ) -> PICResult:
-    """Beyond-paper O2: PIC without materializing A (cosine kinds only).
+    """Beyond-paper O2: PIC without materializing A (factorable specs only
+    — cosine kinds, no adaptive scaling or truncation).
 
     Per-iteration cost O(n·m·r) and memory O(n·m) — the paper's 36.5 GB
     (n = 45k) A matrix is never built. Exact same math as the explicit path,
@@ -152,14 +168,15 @@ def gpic_matrix_free(
     n = x.shape[0]
     if eps is None:
         eps = 1e-5 / n
+    spec = as_affinity_spec(affinity, kind=affinity_kind)
     xn = row_normalize_features(x)
-    op = matrix_free_operator(xn, kind=affinity_kind, use_pallas=use_pallas)
+    op = matrix_free_operator(xn, spec=spec, use_pallas=use_pallas)
 
     kkm, krand = jax.random.split(key)
     v0 = init_power_vectors(krand, op.degree, n_vectors)
     v, t_cols, done, emb_raw = run_power_embedding(
         op, v0, eps, max_iter, embedding=embedding, qr_every=qr_every,
-        snapshot_iters=snapshot_iters)
+        snapshot_iters=snapshot_iters, residual_tol=residual_tol)
     emb = standardize_columns(emb_raw)
     # the sweep itself is jnp either way; the flag still governs k-means
     labels, _ = kmeans(kkm, emb, k, iters=kmeans_iters,

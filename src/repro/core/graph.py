@@ -1,0 +1,62 @@
+"""Two-pass affinity-graph construction (pass 1) over the kernel registry.
+
+This module turns an :class:`~repro.core.affinity.AffinitySpec` into the
+per-row statistic arrays the pass-2 kernels consume (DESIGN.md §11):
+
+  pass 1a  adaptive local scales   sigma_i = ||x_i - x_(scale_k)||
+           from the streamed row-top-k of -d² (stat='neg_sqdist')
+  pass 1b  truncation thresholds   tau_i = row's knn_k-th largest
+           similarity (stat='similarity', adaptive scales applied)
+
+Both passes stream through ``kernels.ops.row_topk`` — no (n, n) array is
+ever allocated, so the A-free engines keep their O(n·m) residency. The
+dense default spec skips pass 1 entirely (``affinity_stats`` returns
+(None, None)) and pass 2 compiles the exact PR-3 kernels.
+
+Sharded callers reuse :func:`scales_from_topk` on their stripe/ring
+top-k reductions (core/operators.py); the dense jnp oracles live in
+core/affinity.py (``local_scales`` / ``knn_thresholds``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .affinity import SCALE_FLOOR, AffinitySpec
+
+
+def scales_from_topk(neg_sqdist_topk: jax.Array) -> jax.Array:
+    """(R,) adaptive local scales from an (R, k) neg-sq-dist top-k buffer:
+    sigma_i = sqrt(k-th smallest d²), floored at ``SCALE_FLOOR`` so
+    duplicated points cannot zero the sigma_i * sigma_j denominator."""
+    kth = jnp.maximum(-neg_sqdist_topk[:, -1], 0.0)
+    return jnp.maximum(jnp.sqrt(kth), SCALE_FLOOR)
+
+
+def affinity_stats(
+    x: jax.Array,
+    spec: AffinitySpec,
+    *,
+    tile: int | None = None,
+    use_pallas: bool = True,
+) -> tuple[jax.Array | None, jax.Array | None]:
+    """(scale, thr) pass-1 statistics for the square self-affinity of ``x``.
+
+    Either entry is None when the spec does not need it; the dense
+    fixed-bandwidth default returns (None, None) without launching
+    anything — keeping the default build bitwise-pinned to PR 3.
+    """
+    scale = thr = None
+    if spec.adaptive:
+        nk = ops.row_topk(
+            x, k=spec.scale_k, stat="neg_sqdist", spec=spec,
+            tm=tile, tn=tile, force_reference=not use_pallas)
+        scale = scales_from_topk(nk)
+    if spec.truncated:
+        tk = ops.row_topk(
+            x, k=spec.knn_k, stat="similarity", spec=spec,
+            scale_r=scale, scale_c=scale,
+            tm=tile, tn=tile, force_reference=not use_pallas)
+        thr = tk[:, -1]
+    return scale, thr

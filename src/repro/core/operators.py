@@ -9,18 +9,34 @@ mesh axes and realize the sweep with the exact same `(op, mode)` kernel
 dispatch (kernels/ops.py) the single-device path uses — bf16 A storage,
 autotuned tiles, streamed tile regeneration and all.
 
+Every builder takes an :class:`~repro.core.affinity.AffinitySpec` (legacy
+``kind``/``sigma`` kwargs coerce to the dense fixed spec). Specs that need
+pass-1 statistics (adaptive local scaling, kNN truncation — DESIGN.md §11)
+run the streamed row-top-k reduction first:
+
+  local builders           one self-stripe row_topk per statistic
+  sharded explicit         row_topk on the local (n/P, n) stripe against
+                           the gathered features; local scales are
+                           all-gathered once (an O(n) collective) so the
+                           column side of exp(-d²/(σᵢσⱼ)) is available
+  sharded streaming ring   an extra ppermute ring sweep per statistic:
+                           per-stage (n/P, n/P) row_topk partials merged
+                           with ``row_topk_merge`` as the feature blocks
+                           rotate — pass 1 never materializes anything
+                           larger than the (n/P, k) buffer
+
 Operator menu (entry points in core/gpic.py, core/pic.py,
 core/distributed.py, front door in core/pipeline.py):
 
   explicit_operator            square Pallas A build + fused mat-mat sweeps
   streaming_operator           A-free: tiles regenerated inside each sweep
-  matrix_free_operator         factored jnp product (cosine kinds, O2)
+  matrix_free_operator         factored jnp product (factorable specs only)
   sharded_explicit_operator    per-device (n/P, n) stripe of the SAME
                                Pallas build; V replicated per sweep
   sharded_matrix_free_operator X̂ row-sharded; O(m r) collectives per sweep
   sharded_streaming_operator   row-striped features, ring-rotated col
                                blocks (ppermute): O(n·m/P) peak memory per
-                               device AND all affinity kinds — the
+                               device AND all affinity specs — the
                                production configuration
 """
 from __future__ import annotations
@@ -31,7 +47,15 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
-from .affinity import AffinityKind, matmat_matrix_free, row_normalize_features
+from ..kernels.row_topk import row_topk_merge
+from .affinity import (
+    AffinityKind,
+    AffinitySpec,
+    as_affinity_spec,
+    matmat_matrix_free,
+    row_normalize_features,
+)
+from .graph import affinity_stats, scales_from_topk
 from .power import PowerOperator
 
 
@@ -62,16 +86,20 @@ def _gram_binding(use_pallas: bool):
 # ---------------------------------------------------------------------------
 
 
-def explicit_operator(inp, *, kind: AffinityKind = "cosine_shifted",
+def explicit_operator(inp, *, spec: AffinitySpec | None = None,
+                      kind: AffinityKind = "cosine_shifted",
                       sigma: float = 1.0, a_dtype=jnp.float32,
                       tile: int | None = None,
                       use_pallas: bool = True) -> PowerOperator:
     """Paper-faithful: build A once (optionally bf16-stored, O4), then
     fused degree-normalized mat-mat sweeps. ``inp`` is row-normalized
-    features for the cosine kinds, raw features for rbf."""
+    features for the cosine kinds, raw features for rbf. Non-dense specs
+    run the streamed pass-1 statistics first; the build masks in-tile."""
+    spec = as_affinity_spec(spec, kind=kind, sigma=sigma)
+    scale, thr = affinity_stats(inp, spec, tile=tile, use_pallas=use_pallas)
     a, d = ops.affinity_and_degree(
-        inp, kind=kind, sigma=sigma, tm=tile, tn=tile,
-        out_dtype=a_dtype, force_reference=not use_pallas,
+        inp, spec=spec, scale_r=scale, scale_c=scale, thr=thr,
+        tm=tile, tn=tile, out_dtype=a_dtype, force_reference=not use_pallas,
     )
 
     def matmat(v):
@@ -82,37 +110,45 @@ def explicit_operator(inp, *, kind: AffinityKind = "cosine_shifted",
                          gram=_gram_binding(use_pallas))
 
 
-def streaming_operator(inp, *, kind: AffinityKind = "cosine_shifted",
+def streaming_operator(inp, *, spec: AffinitySpec | None = None,
+                       kind: AffinityKind = "cosine_shifted",
                        sigma: float = 1.0, tile: int | None = None,
                        use_pallas: bool = True) -> PowerOperator:
     """A-free: affinity tiles are regenerated from the feature slabs inside
-    every power step (DESIGN.md §5). All kinds incl. rbf; peak memory
-    O(n m + n r), no (n, n) allocation ever."""
+    every power step (DESIGN.md §5). All specs incl. adaptive/kNN rbf;
+    peak memory O(n m + n r + n k), no (n, n) allocation ever — pass 1
+    streams through the row-top-k kernel."""
+    spec = as_affinity_spec(spec, kind=kind, sigma=sigma)
+    scale, thr = affinity_stats(inp, spec, tile=tile, use_pallas=use_pallas)
     d = ops.streaming_degree(
-        inp, kind=kind, sigma=sigma, tm=tile, tn=tile,
-        force_reference=not use_pallas,
+        inp, spec=spec, scale_r=scale, scale_c=scale, thr=thr,
+        tm=tile, tn=tile, force_reference=not use_pallas,
     )
 
     def matmat(v):
         return ops.streaming_matmat(
-            inp, v, d, kind=kind, sigma=sigma, tm=tile, tn=tile,
-            force_reference=not use_pallas,
+            inp, v, d, spec=spec, scale_r=scale, scale_c=scale, thr=thr,
+            tm=tile, tn=tile, force_reference=not use_pallas,
         )
 
     return PowerOperator(matmat=matmat, degree=d,
                          gram=_gram_binding(use_pallas))
 
 
-def matrix_free_operator(xn, *, kind: AffinityKind = "cosine_shifted",
+def matrix_free_operator(xn, *, spec: AffinitySpec | None = None,
+                         kind: AffinityKind = "cosine_shifted",
                          use_pallas: bool = True) -> PowerOperator:
     """Factored jnp product A V = f(X̂(X̂ᵀV)) − V (O2): O(n·m·r) per sweep,
-    cosine kinds only. ``xn`` must be row-normalized. The sweep has no
-    Pallas realization; ``use_pallas`` governs the Gram binding only."""
+    factorable specs only (cosine kinds, no scaling/truncation — the
+    rejection lives in ``matmat_matrix_free``). ``xn`` must be
+    row-normalized. The sweep has no Pallas realization; ``use_pallas``
+    governs the Gram binding only."""
+    spec = as_affinity_spec(spec, kind=kind)
     n = xn.shape[0]
-    d = matmat_matrix_free(xn, jnp.ones((n,), xn.dtype), kind)
+    d = matmat_matrix_free(xn, jnp.ones((n,), xn.dtype), spec)
 
     def matmat(v):
-        return matmat_matrix_free(xn, v, kind) / jnp.maximum(
+        return matmat_matrix_free(xn, v, spec) / jnp.maximum(
             d, 1e-30)[:, None]
 
     return PowerOperator(matmat=matmat, degree=d,
@@ -125,7 +161,9 @@ def matrix_free_operator(xn, *, kind: AffinityKind = "cosine_shifted",
 # ---------------------------------------------------------------------------
 
 
-def sharded_explicit_operator(x_loc, *, axes, kind: AffinityKind,
+def sharded_explicit_operator(x_loc, *, axes,
+                              spec: AffinitySpec | None = None,
+                              kind: AffinityKind = "cosine_shifted",
                               sigma: float = 1.0, a_dtype=jnp.float32,
                               fold_shift: bool = False,
                               tile: int | None = None,
@@ -134,25 +172,55 @@ def sharded_explicit_operator(x_loc, *, axes, kind: AffinityKind,
     replicated per sweep via all-gather (O(n r) bytes/step against
     O(n²/P) local compute — collective-light).
 
+    Non-dense specs run pass 1 on the stripe: the local block's row-top-k
+    against the gathered features (same tile program as the single-device
+    pass, so the statistics match it bitwise), with the adaptive scales
+    all-gathered once for the column side of the build.
+
     ``fold_shift`` (O5, cosine_shifted only) stores the stripe as RAW
     masked cosine (the (1+a)/2 transform never touches the O(n²/P) array)
     and folds the shift into an O(n_loc r) epilogue:
     (A V)_i = (ΣV − v_i + (A_cos V)_i)/2, d_i = (n − 1 + d_cos,i)/2.
+    Folding is a storage-algebra trick on the DENSE matrix — a truncated
+    row has no closed-form shift mass — so it requires a dense fixed spec.
     """
+    spec = as_affinity_spec(spec, kind=kind, sigma=sigma)
+    if fold_shift and not spec.dense_fixed:
+        raise ValueError(
+            "fold_shift (O5) rewrites the dense shift algebra; it cannot "
+            f"be combined with adaptive/truncated specs (got {spec})")
     psum, pmax, gather = mesh_reductions(axes)
     idx = jax.lax.axis_index(_axis_tuple(axes))
     n_loc = x_loc.shape[0]
     row0 = idx * n_loc
-    if kind != "rbf":
+    if spec.kind != "rbf":
         x_loc = row_normalize_features(x_loc)
     x_full = gather(x_loc)
     n = x_full.shape[0]
 
-    fold = fold_shift and kind == "cosine_shifted"
-    build_kind = "cosine" if fold else kind
+    scale_loc = scale_full = thr_loc = None
+    if spec.adaptive:
+        nk = ops.row_topk(
+            x_loc, x_full, k=spec.scale_k, stat="neg_sqdist", spec=spec,
+            tm=tile, tn=tile, row_offset=row0,
+            force_reference=not use_pallas)
+        scale_loc = scales_from_topk(nk)
+        scale_full = gather(scale_loc)
+    if spec.truncated:
+        tk = ops.row_topk(
+            x_loc, x_full, k=spec.knn_k, stat="similarity", spec=spec,
+            scale_r=scale_loc, scale_c=scale_full,
+            tm=tile, tn=tile, row_offset=row0,
+            force_reference=not use_pallas)
+        thr_loc = tk[:, -1]
+
+    fold = fold_shift and spec.kind == "cosine_shifted"
+    build_kind = "cosine" if fold else spec.kind
     a_loc, d_raw = ops.affinity_and_degree(
-        x_loc, x_full, kind=build_kind, sigma=sigma, tm=tile, tn=tile,
-        out_dtype=a_dtype, row_offset=row0, force_reference=not use_pallas,
+        x_loc, x_full, kind=build_kind, sigma=spec.sigma,
+        scale_r=scale_loc, scale_c=scale_full, thr=thr_loc,
+        tm=tile, tn=tile, out_dtype=a_dtype, row_offset=row0,
+        force_reference=not use_pallas,
     )
 
     if fold:
@@ -183,19 +251,21 @@ def sharded_explicit_operator(x_loc, *, axes, kind: AffinityKind,
 
 
 def sharded_matrix_free_operator(x_loc, *, axes,
+                                 spec: AffinitySpec | None = None,
                                  kind: AffinityKind = "cosine_shifted",
                                  use_pallas: bool = True) -> PowerOperator:
     """X̂ row-sharded factored product: per sweep one psum of an (m, r)
     block and one (r,) psum — O(m r) collectives, the configuration that
-    scales to thousands of nodes. Cosine kinds only (they factor)."""
+    scales to thousands of nodes. Factorable specs only (they factor)."""
+    spec = as_affinity_spec(spec, kind=kind)
     psum, pmax, gather = mesh_reductions(axes)
     n_loc = x_loc.shape[0]
     xn_loc = row_normalize_features(x_loc)
     d_loc = matmat_matrix_free(
-        xn_loc, jnp.ones((n_loc,), xn_loc.dtype), kind, psum=psum)
+        xn_loc, jnp.ones((n_loc,), xn_loc.dtype), spec, psum=psum)
 
     def matmat(v_loc):
-        av = matmat_matrix_free(xn_loc, v_loc, kind, psum=psum)
+        av = matmat_matrix_free(xn_loc, v_loc, spec, psum=psum)
         return av / jnp.maximum(d_loc, 1e-30)[:, None]
 
     return PowerOperator(matmat=matmat, degree=d_loc,
@@ -204,6 +274,7 @@ def sharded_matrix_free_operator(x_loc, *, axes,
 
 
 def sharded_streaming_operator(x_loc, *, axes, mesh_size: int,
+                               spec: AffinitySpec | None = None,
                                kind: AffinityKind = "cosine_shifted",
                                sigma: float = 1.0, tile: int | None = None,
                                use_pallas: bool = True) -> PowerOperator:
@@ -212,9 +283,19 @@ def sharded_streaming_operator(x_loc, *, axes, mesh_size: int,
     ``ppermute``; every stage regenerates the (n/P, n/P) affinity stripe
     tiles on the fly and accumulates the partial product. Features are
     never gathered: peak per-device memory is O(n·m/P + n·r/P) — and the
-    tile transform is elementwise, so EVERY affinity kind works (rbf
-    included). This is the production configuration: the only one that is
-    simultaneously A-free, fully sharded, and all-kinds (DESIGN.md §9).
+    tile transform is elementwise, so EVERY affinity spec works (rbf,
+    adaptive scaling and kNN truncation included). This is the production
+    configuration: the only one that is simultaneously A-free, fully
+    sharded, and all-specs (DESIGN.md §9, §11).
+
+    Pass 1 for non-dense specs runs as extra ppermute ring sweeps BEFORE
+    the degree sweep: per stage the row-top-k kernel scores the local rows
+    against the block that just arrived and ``row_topk_merge`` folds the
+    (n/P, k) partial into the running buffer — order-independent, so the
+    statistics equal the single-device pass bitwise. The adaptive scales
+    are then all-gathered once (an (n,) vector — negligible against the
+    O(n·m/P) block budget) so every later stage can slice its column
+    block's scales without a second ring.
 
     ``mesh_size`` is the static number of devices P spanned by ``axes``
     (ring length). Collectives per sweep: 2(P−1) ppermutes (the feature
@@ -223,12 +304,13 @@ def sharded_streaming_operator(x_loc, *, axes, mesh_size: int,
     the all-gather equivalent, but with O(n m / P) residency instead of
     O(n m).
     """
+    spec = as_affinity_spec(spec, kind=kind, sigma=sigma)
     psum, pmax, gather = mesh_reductions(axes)
     axes_t = _axis_tuple(axes)
     idx = jax.lax.axis_index(axes_t)
     n_loc = x_loc.shape[0]
     row0 = idx * n_loc
-    if kind != "rbf":
+    if spec.kind != "rbf":
         x_loc = row_normalize_features(x_loc)
     perm = [(i, (i - 1) % mesh_size) for i in range(mesh_size)]
 
@@ -239,31 +321,72 @@ def sharded_streaming_operator(x_loc, *, axes, mesh_size: int,
         return ((idx + s) % mesh_size) * n_loc
 
     # the last stage's block is consumed in place — rotating it again would
-    # be a pure-waste collective, so both sweeps run P-1 rotated stages in
-    # the fori_loop and apply stage P-1 outside it
+    # be a pure-waste collective, so all sweeps (top-k pass 1, degrees,
+    # mat-mat) run P-1 rotated stages in the fori_loop and apply stage P-1
+    # outside it
 
-    def degree_sweep():
-        def stage(s, carry):
-            d, x_ring = carry
-            d = d + ops.streaming_degree(
-                x_loc, x_ring, kind=kind, sigma=sigma, tm=tile, tn=tile,
+    def topk_ring_sweep(k, stat, scale_full):
+        """(n_loc, k) merged top-k of the local rows vs every ring block."""
+        def partial(s, x_ring):
+            scl_c = (None if scale_full is None else
+                     jax.lax.dynamic_slice_in_dim(
+                         scale_full, _col0(s), n_loc))
+            return ops.row_topk(
+                x_loc, x_ring, k=k, stat=stat, spec=spec,
+                scale_r=None if scale_full is None else scale_loc,
+                scale_c=scl_c, tm=tile, tn=tile,
                 row_offset=row0, col_offset=_col0(s),
                 force_reference=not use_pallas)
-            return d, ring(x_ring)
+
+        def stage(s, carry):
+            buf, x_ring = carry
+            buf = row_topk_merge(buf, partial(s, x_ring), k)
+            return buf, ring(x_ring)
+        buf0 = jnp.full((n_loc, k), -jnp.inf, jnp.float32)
+        buf, x_ring = jax.lax.fori_loop(0, mesh_size - 1, stage,
+                                        (buf0, x_loc))
+        return row_topk_merge(buf, partial(mesh_size - 1, x_ring), k)
+
+    scale_loc = scale_full = thr_loc = None
+    if spec.adaptive:
+        scale_loc = scales_from_topk(
+            topk_ring_sweep(spec.scale_k, "neg_sqdist", None))
+        scale_full = gather(scale_loc)
+    if spec.truncated:
+        thr_loc = topk_ring_sweep(
+            spec.knn_k, "similarity", scale_full)[:, -1]
+
+    def _stage_scales(s):
+        if scale_full is None:
+            return None, None
+        return scale_loc, jax.lax.dynamic_slice_in_dim(
+            scale_full, _col0(s), n_loc)
+
+    def degree_sweep():
+        def partial(s, x_ring):
+            scl_r, scl_c = _stage_scales(s)
+            return ops.streaming_degree(
+                x_loc, x_ring, spec=spec, scale_r=scl_r, scale_c=scl_c,
+                thr=thr_loc, tm=tile, tn=tile,
+                row_offset=row0, col_offset=_col0(s),
+                force_reference=not use_pallas)
+
+        def stage(s, carry):
+            d, x_ring = carry
+            return d + partial(s, x_ring), ring(x_ring)
         d, x_ring = jax.lax.fori_loop(
             0, mesh_size - 1, stage,
             (jnp.zeros((n_loc,), jnp.float32), x_loc))
-        return d + ops.streaming_degree(
-            x_loc, x_ring, kind=kind, sigma=sigma, tm=tile, tn=tile,
-            row_offset=row0, col_offset=_col0(mesh_size - 1),
-            force_reference=not use_pallas)
+        return d + partial(mesh_size - 1, x_ring)
 
     d_loc = degree_sweep()
 
     def matmat(v_loc):
         def partial(s, x_ring, v_ring):
+            scl_r, scl_c = _stage_scales(s)
             return ops.streaming_matmat(
-                x_loc, v_ring, None, x_ring, kind=kind, sigma=sigma,
+                x_loc, v_ring, None, x_ring, spec=spec,
+                scale_r=scl_r, scale_c=scl_c, thr=thr_loc,
                 tm=tile, tn=tile, row_offset=row0, col_offset=_col0(s),
                 force_reference=not use_pallas)
 

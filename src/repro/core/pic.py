@@ -20,7 +20,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .affinity import AffinityKind, affinity_matrix
+from .affinity import (
+    AffinityKind,
+    AffinitySpec,
+    affinity_matrix,
+    as_affinity_spec,
+)
 from .kmeans import kmeans
 from .power import (
     batched_power_iteration,
@@ -96,7 +101,8 @@ def standardize_embedding(v: jax.Array) -> jax.Array:
 @functools.partial(
     jax.jit,
     static_argnames=("k", "max_iter", "kmeans_iters", "affinity_kind",
-                     "n_vectors", "embedding", "qr_every", "snapshot_iters"),
+                     "affinity", "n_vectors", "embedding", "qr_every",
+                     "snapshot_iters", "residual_tol"),
 )
 def pic_reference(
     x: jax.Array,
@@ -108,23 +114,36 @@ def pic_reference(
     kmeans_iters: int = 25,
     affinity_kind: AffinityKind = "cosine_shifted",
     sigma: float | None = None,
+    affinity: AffinitySpec | None = None,
     n_vectors: int = 1,
     embedding: str = "pic",
     qr_every: int = 1,
     snapshot_iters: tuple | None = None,
+    residual_tol: float | None = None,
 ) -> PICResult:
-    """Paper Algorithm 1 end-to-end on raw features ``x`` of shape (n, m)."""
-    a = affinity_matrix(x, kind=affinity_kind, sigma=sigma)
+    """Paper Algorithm 1 end-to-end on raw features ``x`` of shape (n, m).
+
+    ``affinity`` (an :class:`AffinitySpec`) runs the dense jnp reference of
+    the full graph-construction policy (adaptive local scaling / kNN
+    truncation — the oracle the Pallas two-pass build is tested against);
+    the legacy ``affinity_kind``/``sigma`` shorthand keeps the classic
+    dense builds, including the sigma=None bandwidth heuristic.
+    """
+    if affinity is not None:
+        a = affinity_matrix(x, spec=affinity)
+    else:
+        a = affinity_matrix(x, kind=affinity_kind, sigma=sigma)
     return pic_from_affinity(
         a, k, key=key, eps=eps, max_iter=max_iter, kmeans_iters=kmeans_iters,
         n_vectors=n_vectors, embedding=embedding, qr_every=qr_every,
-        snapshot_iters=snapshot_iters,
+        snapshot_iters=snapshot_iters, residual_tol=residual_tol,
     )
 
 
 @functools.partial(
     jax.jit, static_argnames=("k", "max_iter", "kmeans_iters", "n_vectors",
-                              "embedding", "qr_every", "snapshot_iters")
+                              "embedding", "qr_every", "snapshot_iters",
+                              "residual_tol")
 )
 def pic_from_affinity(
     a: jax.Array,
@@ -138,6 +157,7 @@ def pic_from_affinity(
     embedding: str = "pic",
     qr_every: int = 1,
     snapshot_iters: tuple | None = None,
+    residual_tol: float | None = None,
 ) -> PICResult:
     """PIC given a pre-built dense affinity matrix A (paper-faithful path).
 
@@ -161,7 +181,8 @@ def pic_from_affinity(
     v0 = init_power_vectors(krand, d, n_vectors, dtype=a.dtype)
     v, t_cols, done, emb_raw = run_power_embedding(
         lambda vv: w @ vv, v0, eps, max_iter, embedding=embedding,
-        qr_every=qr_every, snapshot_iters=snapshot_iters)
+        qr_every=qr_every, snapshot_iters=snapshot_iters,
+        residual_tol=residual_tol)
     emb = standardize_columns(emb_raw)
     labels, _cent = kmeans(kkm, emb, k, iters=kmeans_iters)
     return make_pic_result(labels, v, t_cols, done, embedding=embedding,
@@ -213,9 +234,15 @@ def pic_serial_numpy(
         if sigma is not None:
             sig = float(sigma)
         else:
+            # strided sample, matching core.affinity.rbf_bandwidth_heuristic
+            # (a leading slice is biased on cluster-ordered inputs; the
+            # ceil-division stride spans the whole row range)
+            take = min(512, n)
+            xs = x[:: max(-(-n // take), 1)][:take]
+            sqs = np.sum(xs * xs, axis=1)
             sig = float(np.median(np.sqrt(np.maximum(
-                sq[:512, None] + sq[None, :512] - 2 * x[:512] @ x[:512].T, 0)
-                + np.eye(min(n, 512)) * 1e9)))
+                sqs[:, None] + sqs[None, :] - 2 * xs @ xs.T, 0)
+                + np.eye(len(xs)) * 1e9)))
         a = np.empty((n, n), np.float64)
         for i in range(n):
             d2 = np.maximum(sq[i] + sq - 2.0 * (x[i] @ x.T), 0.0)

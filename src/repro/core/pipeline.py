@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from .affinity import AffinityKind
+from .affinity import AffinityKind, AffinitySpec, as_affinity_spec
 from .distributed import distributed_gpic, distributed_gpic_matrix_free
 from .gpic import gpic, gpic_matrix_free
 from .pic import PICResult
@@ -58,7 +58,14 @@ class GPICConfig:
       shard_axes:   mesh axis name(s) the rows stripe over.
 
     Clustering:
-      affinity_kind/sigma: similarity (sigma only read for 'rbf').
+      affinity:     an :class:`AffinitySpec` — the full graph-construction
+                    policy (kind, bandwidth: fixed sigma or adaptive local
+                    scaling, kNN truncation; DESIGN.md §11). None derives
+                    the dense fixed spec from affinity_kind/sigma.
+      affinity_kind/sigma: legacy shorthand for the dense fixed spec
+                    (sigma only read for 'rbf'); rejected alongside a
+                    non-None ``affinity`` so the two routes cannot
+                    silently disagree.
       n_vectors:    r power vectors in one engine state (O3).
       embedding:    'pic' (classic per-column loop), 'orthogonal' (block
                     iteration: column 0 pinned to the classic trajectory,
@@ -66,6 +73,12 @@ class GPICConfig:
                     subspace — the nested-structure fix, DESIGN.md §10),
                     or 'ensemble' (diffusion-time snapshot concatenation).
       qr_every:     re-orthonormalization period in sweeps ('orthogonal').
+      residual_tol: arm the subspace residual stopping rule ('orthogonal'
+                    with n_vectors > 1): once column 0 converges
+                    classically, a relative ||WV − VΛ|| residual below
+                    this on a QR step stops the whole block instead of
+                    running to max_iter (DESIGN.md §11). None = off (the
+                    bitwise PR-3 loop).
       snapshot_iters: ascending iteration counts to snapshot ('ensemble';
                     None = geometric in max_iter).
       eps_scale:    convergence threshold numerator (eps = eps_scale / n).
@@ -83,11 +96,13 @@ class GPICConfig:
     engine: str = "explicit"
     mesh: Mesh | None = None
     shard_axes: str | Sequence[str] = "data"
+    affinity: AffinitySpec | None = None
     affinity_kind: AffinityKind = "cosine_shifted"
     sigma: float = 1.0
     n_vectors: int = 1
     embedding: str = "pic"
     qr_every: int = 1
+    residual_tol: float | None = None
     snapshot_iters: Sequence[int] | None = None
     eps_scale: float = 1e-5
     max_iter: int = 50
@@ -139,6 +154,32 @@ def run_gpic(
         raise ValueError(
             "snapshot_iters selects the diffusion times of "
             "embedding='ensemble' only")
+    if cfg.residual_tol is not None:
+        if cfg.embedding != "orthogonal":
+            raise ValueError(
+                "residual_tol arms the subspace residual stopping rule of "
+                "embedding='orthogonal' only")
+        if cfg.n_vectors < 2:
+            raise ValueError(
+                "residual_tol stops the QR-coupled block columns; with "
+                "n_vectors=1 the orthogonal loop IS the classic one and "
+                "the rule can never arm — drop it or raise n_vectors")
+        if not float(cfg.residual_tol) > 0.0:
+            raise ValueError(
+                f"residual_tol must be > 0 (a relative residual), got "
+                f"{cfg.residual_tol}")
+    # resolve the affinity spec: an explicit AffinitySpec wins; setting it
+    # ALONGSIDE non-default legacy shorthand is ambiguous and rejected
+    # (sigma <= 0 and bad bandwidth/kind combos are rejected by the spec's
+    # own constructor; neighbor-rank bounds need n and are checked here)
+    if cfg.affinity is not None and (
+            cfg.affinity_kind != "cosine_shifted" or cfg.sigma != 1.0):
+        raise ValueError(
+            "set either GPICConfig.affinity (the full spec) or the legacy "
+            "affinity_kind/sigma shorthand, not both")
+    spec = as_affinity_spec(cfg.affinity, kind=cfg.affinity_kind,
+                            sigma=cfg.sigma)
+    spec.validate_for_n(x.shape[0])
     # reject field combinations the selected route would silently ignore —
     # the front door must not mask misconfiguration a direct call rejects
     if cfg.engine == "matrix_free":
@@ -151,11 +192,19 @@ def run_gpic(
             raise ValueError(
                 f"engine='matrix_free' does not use {dropped} (the factored "
                 "jnp sweep has no A storage or Pallas tiles)")
+        if not spec.factorable:
+            raise ValueError(
+                "engine='matrix_free' needs a factorable affinity spec "
+                "(cosine kinds, fixed bandwidth, no truncation); got "
+                f"{spec} — use the explicit or streaming engine for "
+                "adaptive/kNN graphs")
     elif cfg.fold_shift and (cfg.mesh is None or cfg.engine != "explicit"
-                             or cfg.affinity_kind != "cosine_shifted"):
+                             or spec.kind != "cosine_shifted"
+                             or not spec.dense_fixed):
         raise ValueError(
             "fold_shift (O5) applies only to the sharded explicit engine "
-            "with affinity_kind='cosine_shifted' (the shift being folded)")
+            "with a dense fixed cosine_shifted spec (the shift being "
+            "folded has no closed form on a truncated row)")
     if cfg.engine == "streaming" and cfg.a_dtype != jnp.float32:
         raise ValueError(
             "a_dtype (O4) selects the A *storage* dtype; the streaming "
@@ -167,16 +216,17 @@ def run_gpic(
                       else tuple(cfg.snapshot_iters))
     common = dict(key=key, max_iter=cfg.max_iter,
                   kmeans_iters=cfg.kmeans_iters,
-                  affinity_kind=cfg.affinity_kind, n_vectors=cfg.n_vectors,
+                  affinity=spec, n_vectors=cfg.n_vectors,
                   embedding=cfg.embedding, qr_every=cfg.qr_every,
-                  snapshot_iters=snapshot_iters)
+                  snapshot_iters=snapshot_iters,
+                  residual_tol=cfg.residual_tol)
 
     if cfg.mesh is None:
         if cfg.engine == "matrix_free":
             return gpic_matrix_free(x, k, eps=cfg.eps_scale / x.shape[0],
                                     use_pallas=cfg.use_pallas, **common)
         return gpic(
-            x, k, engine=cfg.engine, sigma=cfg.sigma, a_dtype=cfg.a_dtype,
+            x, k, engine=cfg.engine, a_dtype=cfg.a_dtype,
             tile=cfg.tile, use_pallas=cfg.use_pallas,
             eps=cfg.eps_scale / x.shape[0], **common)
 
@@ -188,6 +238,6 @@ def run_gpic(
             eps_scale=cfg.eps_scale, use_pallas=cfg.use_pallas, **common)
     return distributed_gpic(
         x, k, mesh=cfg.mesh, shard_axes=shard_axes, engine=cfg.engine,
-        eps_scale=cfg.eps_scale, sigma=cfg.sigma, a_dtype=cfg.a_dtype,
+        eps_scale=cfg.eps_scale, a_dtype=cfg.a_dtype,
         fold_shift=cfg.fold_shift, tile=cfg.tile, use_pallas=cfg.use_pallas,
         **common)

@@ -130,19 +130,66 @@ def orthonormalize_block(op, v):
     return jnp.where(jnp.all(jnp.isfinite(ell)), out, v)
 
 
-def _power_loop(op, v0, eps, max_iter, mode, qr_every, snapshot_iters):
+def subspace_residual(op, v, u):
+    """Relative invariant-subspace residual ||U − VΛ||_F / ||U||_F with
+    U = W V (the sweep output) and Λ the least-squares Rayleigh block
+    (VᵀV)⁻¹VᵀU — the ||AQ − QΛ||-style stopping statistic of the
+    orthogonal embedding mode (DESIGN.md §11).
+
+    One Gram of the (n_loc, 2r) concatenation [V | U] supplies every term
+    (the existing tall-skinny Gram kernel; ``op.sum`` finishes the
+    cross-chunk combine, so the sharded value is the single-device one):
+
+        ||U − VΛ||²_F = tr(Gᵤᵤ) − tr(Gᵥᵤᵀ Λ)
+
+    exact for any V (the pinned block is orthonormal only up to column 0's
+    free scale, which the normal-equations solve absorbs).
+    """
+    r = v.shape[1]
+    g = op.sum(op.gram(jnp.concatenate([v, u], axis=1)))       # (2r, 2r)
+    gvv, gvu, guu = g[:r, :r], g[:r, r:], g[r:, r:]
+    lam = jnp.linalg.solve(gvv, gvu)
+    res2 = jnp.trace(guu) - jnp.trace(gvu.T @ lam)
+    rel = jnp.sqrt(jnp.maximum(res2, 0.0)
+                   / jnp.maximum(jnp.trace(guu), 1e-30))
+    # a singular Gram (columns momentarily aligned) solves to non-finite;
+    # report "not converged" and let the next QR re-mix, mirroring the
+    # orthonormalize_block skip guard
+    return jnp.where(jnp.isfinite(rel), rel, jnp.inf)
+
+
+def _power_loop(op, v0, eps, max_iter, mode, qr_every, snapshot_iters,
+                residual_tol=None):
     """The one convergence loop behind every embedding mode. Returns
     (t, V, t_cols, done, snaps) with snaps (n_loc, r, S) holding the block
-    at each requested iteration count (S = len(snapshot_iters))."""
+    at each requested iteration count (S = len(snapshot_iters)).
+
+    ``residual_tol`` (static; block mode only) arms the subspace residual
+    stopping rule: on every QR step, once the pinned column 0 has converged
+    by its classic acceleration rule, a relative residual <= residual_tol
+    latches ALL remaining columns done — the block stops at subspace
+    convergence instead of running to max_iter. None (the default) compiles
+    the exact PR-3 loop.
+    """
     if mode not in ("pic", "orthogonal"):
         raise ValueError(
             f"unknown power-loop mode {mode!r} (expected 'pic' or "
             "'orthogonal'; 'ensemble' is ensemble_power_iteration)")
     if qr_every < 1:
         raise ValueError(f"qr_every must be >= 1, got {qr_every}")
+    if residual_tol is not None and not float(residual_tol) > 0.0:
+        raise ValueError(
+            f"residual_tol must be > 0 (a relative residual), got "
+            f"{residual_tol}")
     op = as_operator(op)
     r = v0.shape[1]
     block = mode == "orthogonal" and r > 1
+    residual = residual_tol is not None
+    if residual and not block:
+        raise ValueError(
+            "residual_tol needs a QR-coupled block (mode='orthogonal' "
+            f"with r > 1); got mode={mode!r}, r={r} — the rule could "
+            "never arm")
 
     def cond(state):
         t, _v, _delta, done, _t_cols, _snaps = state
@@ -153,12 +200,13 @@ def _power_loop(op, v0, eps, max_iter, mode, qr_every, snapshot_iters):
         u = op.matmat(v)                                        # (n_loc, r)
         l1 = op.sum(jnp.sum(jnp.abs(u), axis=0))                # (r,)
         v_next = u / jnp.maximum(l1, 1e-30)[None, :]
+        qr_now = (t + 1) % qr_every == 0
         if block:
             if qr_every == 1:
                 v_next = orthonormalize_block(op, v_next)
             else:
                 v_next = jax.lax.cond(
-                    (t + 1) % qr_every == 0,
+                    qr_now,
                     lambda vv: orthonormalize_block(op, vv),
                     lambda vv: vv, v_next)
         delta_next = jnp.abs(v_next - v)
@@ -173,6 +221,15 @@ def _power_loop(op, v0, eps, max_iter, mode, qr_every, snapshot_iters):
         delta_next = jnp.where(freeze[None, :], delta, delta_next)
         t_cols = t_cols + jnp.where(done, 0, 1).astype(jnp.int32)
         done = jnp.logical_or(done, accel <= eps)
+        if residual:
+            # priced at QR cadence only; gating on done[0] keeps column 0's
+            # classic n_iter/converged stats bitwise (the subspace never
+            # stops the loop before the pinned trajectory has finished)
+            rel = jax.lax.cond(
+                qr_now & done[0],
+                lambda: subspace_residual(op, v, u),
+                lambda: jnp.float32(jnp.inf))
+            done = jnp.logical_or(done, rel <= residual_tol)
         for j, s in enumerate(snapshot_iters):
             snaps = snaps.at[:, :, j].set(
                 jnp.where(t + 1 == s, v_next, snaps[:, :, j]))
@@ -188,7 +245,7 @@ def _power_loop(op, v0, eps, max_iter, mode, qr_every, snapshot_iters):
 
 
 def batched_power_iteration(op, v0, eps, max_iter, *, mode="pic",
-                            qr_every=1):
+                            qr_every=1, residual_tol=None):
     """Run the truncated power iteration on batched state.
 
     Args:
@@ -202,6 +259,10 @@ def batched_power_iteration(op, v0, eps, max_iter, *, mode="pic",
         'orthogonal' (block iteration, column 0 pinned — see module doc).
         With r = 1 both modes are the identical classic loop, bitwise.
       qr_every: re-orthonormalization period in sweeps ('orthogonal' only).
+      residual_tol: arm the subspace residual stopping rule ('orthogonal'
+        with r > 1 only): once column 0 has converged classically, a
+        relative ||WV − VΛ|| residual <= residual_tol on a QR step stops
+        the whole block (None — the default — runs the PR-3 loop bitwise).
 
     Returns:
       (V, t_cols, done): final local (n_loc, r) state, per-column iteration
@@ -210,7 +271,8 @@ def batched_power_iteration(op, v0, eps, max_iter, *, mode="pic",
       ``op.all_gather`` if the full embedding is needed.
     """
     _t, v, t_cols, done, _snaps = _power_loop(
-        op, v0, eps, max_iter, mode, qr_every, ())
+        op, v0, eps, max_iter, mode, qr_every, (),
+        residual_tol=residual_tol)
     return v, t_cols, done
 
 
@@ -259,7 +321,7 @@ def ensemble_power_iteration(op, v0, eps, max_iter, *,
 
 
 def run_power_embedding(op, v0, eps, max_iter, *, embedding="pic",
-                        qr_every=1, snapshot_iters=None):
+                        qr_every=1, snapshot_iters=None, residual_tol=None):
     """Run the engine in the requested embedding mode — the one helper every
     entry point (local, sharded, oracle) calls, so mode routing exists once.
 
@@ -271,12 +333,17 @@ def run_power_embedding(op, v0, eps, max_iter, *, embedding="pic",
     if embedding not in EMBEDDINGS:
         raise ValueError(
             f"unknown embedding {embedding!r} (expected one of {EMBEDDINGS})")
+    if residual_tol is not None and embedding != "orthogonal":
+        raise ValueError(
+            "residual_tol arms the subspace residual stopping rule of "
+            "embedding='orthogonal' only")
     if embedding == "ensemble":
         snaps, t_cols, done, v = ensemble_power_iteration(
             op, v0, eps, max_iter, snapshot_iters=snapshot_iters)
         return v, t_cols, done, ensemble_embedding(snaps)
     v, t_cols, done = batched_power_iteration(
-        op, v0, eps, max_iter, mode=embedding, qr_every=qr_every)
+        op, v0, eps, max_iter, mode=embedding, qr_every=qr_every,
+        residual_tol=residual_tol)
     return v, t_cols, done, v
 
 

@@ -4,6 +4,7 @@ from .synthetic import (
     dataset_by_name,
     gaussians,
     shapes,
+    shuffle_points,
     smiley,
     three_circles,
     two_moons,
@@ -18,4 +19,5 @@ __all__ = [
     "shapes",
     "smiley",
     "dataset_by_name",
+    "shuffle_points",
 ]

@@ -7,10 +7,25 @@ Experiment II (subsampling quality): ``cassini``, ``gaussians``, ``shapes``,
 All generators return ``(X float32 (n, 2), y int32 (n,))`` and are
 deterministic given ``seed``. Class balance is as equal as n allows
 (Experiment II requires balanced classes).
+
+Ordering contract: every generator emits points CLASS-BY-CLASS (labels
+are sorted), because downstream code must not depend on row order — PIC
+itself is permutation-equivariant (property-tested), and any sampling
+heuristic has to survive cluster-sorted input (the
+``rbf_bandwidth_heuristic`` leading-slice bias fixed in PR 5 was exactly
+such a dependency). Use :func:`shuffle_points` when a test needs the
+order-randomized view of the same dataset.
 """
 from __future__ import annotations
 
 import numpy as np
+
+
+def shuffle_points(x: np.ndarray, y: np.ndarray, *, seed: int = 0):
+    """Deterministic row shuffle of a (X, y) dataset — the antidote to the
+    generators' class-sorted ordering contract (see module doc)."""
+    perm = np.random.default_rng(seed).permutation(len(y))
+    return x[perm], y[perm]
 
 
 def _split_counts(n: int, k: int) -> list[int]:

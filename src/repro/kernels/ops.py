@@ -36,6 +36,7 @@ from .kmeans_assign import kmeans_assign as _assign_pallas
 from .power_step import degree_normalized_matmat as _dnmm_pallas
 from .power_step import degree_normalized_matvec as _dnmv_pallas
 from .power_step import power_step as _power_pallas
+from .row_topk import row_topk as _row_topk_pallas
 from .streaming import affinity_degree_streaming as _degree_streaming
 from .streaming import affinity_matmat as _streaming_pallas
 from .tuning import choose_tiles
@@ -136,6 +137,16 @@ register("gram", "pallas")(_gram_pallas)
 register("gram", "reference")(ref.gram_ref)
 register("kmeans_assign", "pallas")(_assign_pallas)
 register("kmeans_assign", "reference")(ref.kmeans_assign_ref)
+register("row_topk", "pallas")(_row_topk_pallas)
+register("row_topk", "reference")(ref.row_topk_ref)
+
+
+def _spec_kind_sigma(spec, kind: str, sigma: float) -> tuple[str, float]:
+    """Resolve (kind, sigma) with an AffinitySpec taking precedence over
+    the legacy loose kwargs (duck-typed: any object with .kind/.sigma)."""
+    if spec is None:
+        return kind, sigma
+    return spec.kind, float(spec.sigma)
 
 
 # ---------------------------------------------------------------------------
@@ -145,6 +156,7 @@ register("kmeans_assign", "reference")(ref.kmeans_assign_ref)
 
 
 def affinity_and_degree(xn, xc=None, *, kind="cosine_shifted", sigma=1.0,
+                        spec=None, scale_r=None, scale_c=None, thr=None,
                         tm=None, tn=None, out_dtype=jnp.float32,
                         row_offset=0, col_offset=0,
                         force_reference=False, mode=None):
@@ -153,12 +165,19 @@ def affinity_and_degree(xn, xc=None, *, kind="cosine_shifted", sigma=1.0,
     ``xc=None`` is the square self-affinity; with ``xc`` given the result
     is the (R, C) stripe at (row_offset, col_offset) of the global matrix
     — the sharded explicit path's per-device build (DESIGN.md §9).
+
+    ``spec`` (an AffinitySpec) supplies kind/sigma; the pass-1 statistic
+    arrays ``scale_r``/``scale_c`` (adaptive local scales) and ``thr``
+    (per-row truncation thresholds) realize its policies in-tile
+    (DESIGN.md §11).
     """
+    kind, sigma = _spec_kind_sigma(spec, kind, sigma)
     mode = _resolve_mode(mode, force_reference)
     if mode == "reference":
         a, deg = ref.affinity_and_degree_ref(
             xn, xc, kind=kind, sigma=sigma,
-            row_offset=row_offset, col_offset=col_offset)
+            row_offset=row_offset, col_offset=col_offset,
+            scale_r=scale_r, scale_c=scale_c, thr=thr)
         return a.astype(out_dtype), deg   # honor O4 storage dtype here too
     n = max(xn.shape[0], xn.shape[0] if xc is None else xc.shape[0])
     tm, tn = _tiles(n, tm, tn, m=xn.shape[1],
@@ -166,6 +185,7 @@ def affinity_and_degree(xn, xc=None, *, kind="cosine_shifted", sigma=1.0,
     return dispatch("affinity_and_degree", mode)(
         xn, xc, kind=kind, sigma=sigma, tm=tm, tn=tn, out_dtype=out_dtype,
         row_offset=row_offset, col_offset=col_offset,
+        scale_r=scale_r, scale_c=scale_c, thr=thr,
         interpret=_interpret(),
     )
 
@@ -200,7 +220,8 @@ def degree_normalized_matmat(a, v, d, *, tm=None, tn=None,
 
 
 def streaming_matmat(x, v, d=None, xc=None, *, kind="cosine_shifted",
-                     sigma=1.0, tm=None, tn=None, row_offset=0, col_offset=0,
+                     sigma=1.0, spec=None, scale_r=None, scale_c=None,
+                     thr=None, tm=None, tn=None, row_offset=0, col_offset=0,
                      force_reference=False, mode=None):
     """U = (A V)/d with A regenerated on the fly — no (n, n) allocation.
 
@@ -208,40 +229,77 @@ def streaming_matmat(x, v, d=None, xc=None, *, kind="cosine_shifted",
     at (row_offset, col_offset) against col features xc (C, m) and V
     (C, r) — one ring stage of the sharded streaming engine. ``d=None``
     skips the degree normalization so stripe partials can accumulate.
+    ``spec``/``scale_r``/``scale_c``/``thr`` as in :func:`affinity_and_degree`.
     """
+    kind, sigma = _spec_kind_sigma(spec, kind, sigma)
     mode = _resolve_mode(mode, force_reference, default="streaming")
     if mode == "reference":
         return ref.affinity_matmat_ref(x, v, d, xc, kind=kind, sigma=sigma,
                                        row_offset=row_offset,
-                                       col_offset=col_offset)
+                                       col_offset=col_offset,
+                                       scale_r=scale_r, scale_c=scale_c,
+                                       thr=thr)
     n = max(x.shape[0], x.shape[0] if xc is None else xc.shape[0])
     tm, tn = _tiles(n, tm, tn, r=v.shape[1], m=x.shape[1])
     return dispatch("streaming_matmat", mode)(
         x, v, d, xc, kind=kind, sigma=sigma, tm=tm, tn=tn,
         row_offset=row_offset, col_offset=col_offset,
+        scale_r=scale_r, scale_c=scale_c, thr=thr,
         interpret=_interpret(),
     )
 
 
 def streaming_degree(x, xc=None, *, kind="cosine_shifted", sigma=1.0,
+                     spec=None, scale_r=None, scale_c=None, thr=None,
                      tm=None, tn=None, row_offset=0, col_offset=0,
                      force_reference=False, mode=None):
     """Degree vector D = A 1 in one streamed sweep (RowSum without A).
 
     With ``xc`` given, returns the partial row sums of the stripe at
     (row_offset, col_offset) over that column block only.
+    ``spec``/``scale_r``/``scale_c``/``thr`` as in :func:`affinity_and_degree`.
     """
+    kind, sigma = _spec_kind_sigma(spec, kind, sigma)
     mode = _resolve_mode(mode, force_reference, default="streaming")
     if mode == "reference":
         return ref.affinity_degree_streaming_ref(
             x, xc, kind=kind, sigma=sigma,
-            row_offset=row_offset, col_offset=col_offset)
+            row_offset=row_offset, col_offset=col_offset,
+            scale_r=scale_r, scale_c=scale_c, thr=thr)
     n = max(x.shape[0], x.shape[0] if xc is None else xc.shape[0])
     tm, tn = _tiles(n, tm, tn, m=x.shape[1])
     return dispatch("streaming_degree", mode)(
         x, xc, kind=kind, sigma=sigma, tm=tm, tn=tn,
         row_offset=row_offset, col_offset=col_offset,
+        scale_r=scale_r, scale_c=scale_c, thr=thr,
         interpret=_interpret()
+    )
+
+
+def row_topk(x, xc=None, *, k, stat="similarity", kind="cosine_shifted",
+             sigma=1.0, spec=None, scale_r=None, scale_c=None,
+             tm=None, tn=None, row_offset=0, col_offset=0,
+             force_reference=False, mode=None):
+    """(R, k) per-row descending top-k scores — pass 1 of the two-pass
+    affinity-graph build (kernels/row_topk.py, DESIGN.md §11).
+
+    ``stat='neg_sqdist'`` is the k-th-nearest-neighbor pass (adaptive local
+    scales); ``stat='similarity'`` the truncation-threshold pass. Streamed:
+    no (R, C) allocation in any mode but 'reference'.
+    """
+    kind, sigma = _spec_kind_sigma(spec, kind, sigma)
+    mode = _resolve_mode(mode, force_reference)
+    if mode == "reference":
+        return ref.row_topk_ref(x, xc, k=k, stat=stat, kind=kind, sigma=sigma,
+                                scale_r=scale_r, scale_c=scale_c,
+                                row_offset=row_offset, col_offset=col_offset)
+    n = max(x.shape[0], x.shape[0] if xc is None else xc.shape[0])
+    tm, tn = _tiles(n, tm, tn, m=x.shape[1])
+    return dispatch("row_topk", mode)(
+        x, xc, k=k, stat=stat, kind=kind, sigma=sigma, tm=tm, tn=tn,
+        row_offset=row_offset, col_offset=col_offset,
+        scale_r=scale_r, scale_c=scale_c,
+        interpret=_interpret(),
     )
 
 

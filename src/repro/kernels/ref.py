@@ -5,6 +5,33 @@ import jax
 import jax.numpy as jnp
 
 
+def _affinity_scores_ref(
+    x: jax.Array,
+    c: jax.Array,
+    *,
+    kind: str,
+    sigma: float,
+    scale_r: jax.Array | None,
+    scale_c: jax.Array | None,
+) -> jax.Array:
+    """Dense (R, C) similarity scores before any masking — the one place
+    the reference similarity transform (fixed or adaptive bandwidth) lives."""
+    if kind in ("cosine", "cosine_shifted"):
+        a = x @ c.T
+        if kind == "cosine_shifted":
+            a = 0.5 * (1.0 + a)
+        return a
+    if kind == "rbf":
+        sqr = jnp.sum(x * x, axis=1)
+        sqc = jnp.sum(c * c, axis=1)
+        d2 = jnp.maximum(sqr[:, None] + sqc[None, :] - 2.0 * (x @ c.T), 0.0)
+        if scale_r is not None:
+            return jnp.exp(-d2 / (scale_r.astype(jnp.float32)[:, None]
+                                  * scale_c.astype(jnp.float32)[None, :]))
+        return jnp.exp(-d2 / (2.0 * sigma * sigma))
+    raise ValueError(kind)
+
+
 def affinity_and_degree_ref(
     xn: jax.Array,
     xc: jax.Array | None = None,
@@ -13,25 +40,67 @@ def affinity_and_degree_ref(
     sigma: float = 1.0,
     row_offset: jax.Array | int = 0,
     col_offset: jax.Array | int = 0,
+    scale_r: jax.Array | None = None,
+    scale_c: jax.Array | None = None,
+    thr: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Oracle for kernels.affinity.affinity_and_degree (stripe-general)."""
+    """Oracle for kernels.affinity.affinity_and_degree (stripe-general).
+
+    ``scale_r``/``scale_c`` are the (R,)/(C,) adaptive local scales (rbf
+    only; replaces the 2 sigma^2 denominator with scale_i * scale_j);
+    ``thr`` is the (R,) per-row truncation threshold — entries strictly
+    below it are zeroed (DESIGN.md §11).
+    """
     x = xn.astype(jnp.float32)
     c = x if xc is None else xc.astype(jnp.float32)
-    if kind in ("cosine", "cosine_shifted"):
-        a = x @ c.T
-        if kind == "cosine_shifted":
-            a = 0.5 * (1.0 + a)
-    elif kind == "rbf":
-        sqr = jnp.sum(x * x, axis=1)
-        sqc = jnp.sum(c * c, axis=1)
-        d2 = jnp.maximum(sqr[:, None] + sqc[None, :] - 2.0 * (x @ c.T), 0.0)
-        a = jnp.exp(-d2 / (2.0 * sigma * sigma))
-    else:
-        raise ValueError(kind)
+    a = _affinity_scores_ref(x, c, kind=kind, sigma=sigma,
+                             scale_r=scale_r, scale_c=scale_c)
     grows = row_offset + jnp.arange(a.shape[0])[:, None]
     gcols = col_offset + jnp.arange(a.shape[1])[None, :]
-    a = jnp.where(grows != gcols, a, 0.0)
+    valid = grows != gcols
+    if thr is not None:
+        valid = valid & (a >= thr.astype(jnp.float32)[:, None])
+    a = jnp.where(valid, a, 0.0)
     return a, jnp.sum(a, axis=1)
+
+
+def row_topk_ref(
+    x: jax.Array,
+    xc: jax.Array | None = None,
+    *,
+    k: int,
+    stat: str = "similarity",
+    kind: str = "cosine_shifted",
+    sigma: float = 1.0,
+    scale_r: jax.Array | None = None,
+    scale_c: jax.Array | None = None,
+    row_offset: jax.Array | int = 0,
+    col_offset: jax.Array | int = 0,
+) -> jax.Array:
+    """Oracle for kernels.row_topk.row_topk: per-row descending top-k of
+
+      stat='similarity'  the affinity value (kind/sigma/scales applied)
+      stat='neg_sqdist'  -||x_i - c_j||^2  (so [:, k-1] is the k-th
+                         nearest-neighbor statistic)
+
+    over the VALID entries of the stripe (global diagonal excluded). Rows
+    with fewer than k valid entries pad with -inf.
+    """
+    x = x.astype(jnp.float32)
+    c = x if xc is None else xc.astype(jnp.float32)
+    if stat == "similarity":
+        s = _affinity_scores_ref(x, c, kind=kind, sigma=sigma,
+                                 scale_r=scale_r, scale_c=scale_c)
+    elif stat == "neg_sqdist":
+        sqr = jnp.sum(x * x, axis=1)
+        sqc = jnp.sum(c * c, axis=1)
+        s = -jnp.maximum(sqr[:, None] + sqc[None, :] - 2.0 * (x @ c.T), 0.0)
+    else:
+        raise ValueError(f"unknown stat {stat!r}")
+    grows = row_offset + jnp.arange(s.shape[0])[:, None]
+    gcols = col_offset + jnp.arange(s.shape[1])[None, :]
+    s = jnp.where(grows != gcols, s, -jnp.inf)
+    return jax.lax.top_k(s, k)[0]
 
 
 def degree_normalized_matvec_ref(
@@ -60,11 +129,15 @@ def affinity_matmat_ref(
     sigma: float = 1.0,
     row_offset: jax.Array | int = 0,
     col_offset: jax.Array | int = 0,
+    scale_r: jax.Array | None = None,
+    scale_c: jax.Array | None = None,
+    thr: jax.Array | None = None,
 ) -> jax.Array:
     """Oracle for kernels.streaming.affinity_matmat: (A @ V) / d, dense A."""
     a, _ = affinity_and_degree_ref(x, xc, kind=kind, sigma=sigma,
                                    row_offset=row_offset,
-                                   col_offset=col_offset)
+                                   col_offset=col_offset,
+                                   scale_r=scale_r, scale_c=scale_c, thr=thr)
     u = a @ v.astype(jnp.float32)
     if d is None:
         return u
@@ -79,11 +152,16 @@ def affinity_degree_streaming_ref(
     sigma: float = 1.0,
     row_offset: jax.Array | int = 0,
     col_offset: jax.Array | int = 0,
+    scale_r: jax.Array | None = None,
+    scale_c: jax.Array | None = None,
+    thr: jax.Array | None = None,
 ) -> jax.Array:
     """Oracle for kernels.streaming.affinity_degree_streaming."""
     _, deg = affinity_and_degree_ref(x, xc, kind=kind, sigma=sigma,
                                      row_offset=row_offset,
-                                     col_offset=col_offset)
+                                     col_offset=col_offset,
+                                     scale_r=scale_r, scale_c=scale_c,
+                                     thr=thr)
     return deg
 
 

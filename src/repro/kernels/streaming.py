@@ -23,6 +23,13 @@ streaming ring (DESIGN.md §9) calls this once per ring stage with the
 feature block that just arrived over the mesh, so each device's peak
 memory stays O(n·m/P).
 
+The graph-construction policies (DESIGN.md §11) stream exactly like the
+explicit build: adaptive local scales ride in as (·, 1) blocks next to the
+squared norms and swap the tile transform to exp(-d²/(σᵢσⱼ)); the per-row
+truncation threshold merges into the validity mask, so truncated entries
+contribute exact zeros to the product/degrees — the streamed sweep and the
+explicit masked matrix stay bitwise-consistent at matching tile sizes.
+
 Passing d = ones (or ``affinity_matmat(..., d=None)``) turns off the degree
 normalization, which with V = ones((n, 1)) computes the degree vector itself
 in one streamed sweep — the RowSum kernel without the matrix. ``d=None``
@@ -42,39 +49,62 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .affinity import (
+    affinity_tile_transform,
+    policy_specs_and_operands,
+    tile_masks,
+    unpack_policy_refs,
+)
 
-def _streaming_kernel(
-    off_ref,                                          # (1, 2) SMEM offsets
-    xr_ref, xc_ref, sqr_ref, sqc_ref, v_ref, d_ref,   # inputs
-    u_ref,                                            # output
-    *, kind: str, n_rows: int, n_cols: int, tm: int, tn: int,
-    inv_two_sigma_sq: float, nj: int, normalize: bool,
-):
-    i = pl.program_id(0)
-    j = pl.program_id(1)
 
+def _masked_tile(i, j, off_ref, xr_ref, xc_ref, sqr_ref, sqc_ref,
+                 sclr_ref, sclc_ref, thr_ref,
+                 *, kind, n_rows, n_cols, tm, tn, inv_two_sigma_sq,
+                 adaptive, truncate):
+    """Regenerate the masked affinity tile — the shared body of both
+    streaming kernels, matching kernels/affinity.py op-for-op."""
     xr = xr_ref[...]                   # (TM, m) row slab
     xc = xc_ref[...]                   # (TN, m) col slab
     dot = jax.lax.dot_general(
         xr, xc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )                                  # (TM, TN) affinity tile on the MXU
 
-    if kind == "cosine":
-        a = dot
-    elif kind == "cosine_shifted":
-        a = 0.5 * (1.0 + dot)
-    elif kind == "rbf":
-        d2 = sqr_ref[...] + sqc_ref[...].T - 2.0 * dot   # (TM,1)+(1,TN)
-        a = jnp.exp(-jnp.maximum(d2, 0.0) * inv_two_sigma_sq)
-    else:
-        raise ValueError(kind)
+    a = affinity_tile_transform(
+        dot, sqr_ref[...] if kind == "rbf" else None,
+        sqc_ref[...] if kind == "rbf" else None,
+        kind=kind, inv_two_sigma_sq=inv_two_sigma_sq,
+        sclr=sclr_ref[...] if adaptive else None,
+        sclc=sclc_ref[...] if adaptive else None,
+    )
 
-    lrows = i * tm + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 0)
-    lcols = j * tn + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 1)
-    grows = off_ref[0, 0] + lrows
-    gcols = off_ref[0, 1] + lcols
-    valid = (grows != gcols) & (lrows < n_rows) & (lcols < n_cols)
-    a = jnp.where(valid, a, 0.0)
+    valid = tile_masks(i, j, off_ref, tm=tm, tn=tn,
+                       n_rows=n_rows, n_cols=n_cols)
+    if truncate:
+        valid = valid & (a >= thr_ref[...])              # (TM, 1) broadcast
+    return jnp.where(valid, a, 0.0)
+
+
+def _streaming_kernel(
+    off_ref,                                          # (1, 2) SMEM offsets
+    *refs,
+    kind: str, n_rows: int, n_cols: int, tm: int, tn: int,
+    inv_two_sigma_sq: float, nj: int, normalize: bool,
+    adaptive: bool, truncate: bool,
+):
+    refs = list(refs)
+    u_ref = refs[-1]
+    xr_ref, xc_ref, sqr_ref, sqc_ref, v_ref, d_ref = refs[:6]
+    sclr_ref, sclc_ref, thr_ref = unpack_policy_refs(
+        refs[6:-1], adaptive, truncate)
+
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    a = _masked_tile(i, j, off_ref, xr_ref, xc_ref, sqr_ref, sqc_ref,
+                     sclr_ref, sclc_ref, thr_ref,
+                     kind=kind, n_rows=n_rows, n_cols=n_cols, tm=tm, tn=tn,
+                     inv_two_sigma_sq=inv_two_sigma_sq,
+                     adaptive=adaptive, truncate=truncate)
 
     v = v_ref[...]                     # (TN, r) slice of V
     partial = jax.lax.dot_general(
@@ -113,6 +143,9 @@ def affinity_matmat(
     interpret: bool = False,
     row_offset: jax.Array | int = 0,
     col_offset: jax.Array | int = 0,
+    scale_r: jax.Array | None = None,
+    scale_c: jax.Array | None = None,
+    thr: jax.Array | None = None,
 ) -> jax.Array:
     """U = (A @ V) / d with A regenerated tile-by-tile from features.
 
@@ -121,11 +154,18 @@ def affinity_matmat(
     normalization); returns (R, r) f32. The offsets locate the stripe in
     the global matrix for the diagonal mask. For the cosine kinds pass
     L2-row-normalized features; for ``rbf`` pass raw features plus the
-    bandwidth ``sigma``. No (R, C) array is ever allocated — peak memory
-    is O((R + C)·m + (R + C)·r).
+    bandwidth ``sigma``. ``scale_r``/``scale_c`` (R,)/(C,) switch rbf to
+    adaptive local scaling; ``thr`` (R,) truncates rows below their pass-1
+    threshold (DESIGN.md §11). No (R, C) array is ever allocated — peak
+    memory is O((R + C)·m + (R + C)·r).
     """
     if xc is None:
         xc = x
+    adaptive = scale_r is not None
+    truncate = thr is not None
+    if adaptive and (kind != "rbf" or scale_c is None):
+        raise ValueError("adaptive scaling needs kind='rbf' and both "
+                         "scale_r and scale_c")
     n_rows, m = x.shape
     n_cols = xc.shape[0]
     r = v.shape[1]
@@ -148,58 +188,53 @@ def affinity_matmat(
         kind=kind, n_rows=n_rows, n_cols=n_cols, tm=tm, tn=tn,
         inv_two_sigma_sq=float(1.0 / (2.0 * sigma * sigma)),
         nj=grid[1], normalize=normalize,
+        adaptive=adaptive, truncate=truncate,
     )
+    in_specs = [
+        pl.BlockSpec((1, 2), lambda i, j: (0, 0),
+                     memory_space=pltpu.SMEM),        # global offsets
+        pl.BlockSpec((tm, m), lambda i, j: (i, 0)),   # row slab
+        pl.BlockSpec((tn, m), lambda i, j: (j, 0)),   # col slab
+        pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),   # row sq-norms
+        pl.BlockSpec((tn, 1), lambda i, j: (j, 0)),   # col sq-norms
+        pl.BlockSpec((tn, r), lambda i, j: (j, 0)),   # V slice
+        pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),   # degree
+    ]
+    operands = [off, xr32, xc32, sqr, sqc, vp, dp[:, None]]
+    pol_specs, pol_ops = policy_specs_and_operands(
+        scale_r, scale_c, thr, tm=tm, tn=tn, rp=rp, cp=cp,
+        n_rows=n_rows, n_cols=n_cols)
     u = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 2), lambda i, j: (0, 0),
-                         memory_space=pltpu.SMEM),        # global offsets
-            pl.BlockSpec((tm, m), lambda i, j: (i, 0)),   # row slab
-            pl.BlockSpec((tn, m), lambda i, j: (j, 0)),   # col slab
-            pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),   # row sq-norms
-            pl.BlockSpec((tn, 1), lambda i, j: (j, 0)),   # col sq-norms
-            pl.BlockSpec((tn, r), lambda i, j: (j, 0)),   # V slice
-            pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),   # degree
-        ],
+        in_specs=in_specs + pol_specs,
         out_specs=pl.BlockSpec((tm, r), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rp, r), jnp.float32),
         interpret=interpret,
-    )(off, xr32, xc32, sqr, sqc, vp, dp[:, None])
+    )(*operands, *pol_ops)
     return u[:n_rows]
 
 
 def _streaming_degree_kernel(
     off_ref,
-    xr_ref, xc_ref, sqr_ref, sqc_ref, d_ref,
-    *, kind: str, n_rows: int, n_cols: int, tm: int, tn: int,
-    inv_two_sigma_sq: float,
+    *refs,
+    kind: str, n_rows: int, n_cols: int, tm: int, tn: int,
+    inv_two_sigma_sq: float, adaptive: bool, truncate: bool,
 ):
+    refs = list(refs)
+    d_ref = refs[-1]
+    xr_ref, xc_ref, sqr_ref, sqc_ref = refs[:4]
+    sclr_ref, sclc_ref, thr_ref = unpack_policy_refs(
+        refs[4:-1], adaptive, truncate)
+
     i = pl.program_id(0)
     j = pl.program_id(1)
 
-    xr = xr_ref[...]
-    xc = xc_ref[...]
-    dot = jax.lax.dot_general(
-        xr, xc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )
-
-    if kind == "cosine":
-        a = dot
-    elif kind == "cosine_shifted":
-        a = 0.5 * (1.0 + dot)
-    elif kind == "rbf":
-        d2 = sqr_ref[...] + sqc_ref[...].T - 2.0 * dot
-        a = jnp.exp(-jnp.maximum(d2, 0.0) * inv_two_sigma_sq)
-    else:
-        raise ValueError(kind)
-
-    lrows = i * tm + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 0)
-    lcols = j * tn + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 1)
-    grows = off_ref[0, 0] + lrows
-    gcols = off_ref[0, 1] + lcols
-    valid = (grows != gcols) & (lrows < n_rows) & (lcols < n_cols)
-    a = jnp.where(valid, a, 0.0)
+    a = _masked_tile(i, j, off_ref, xr_ref, xc_ref, sqr_ref, sqc_ref,
+                     sclr_ref, sclc_ref, thr_ref,
+                     kind=kind, n_rows=n_rows, n_cols=n_cols, tm=tm, tn=tn,
+                     inv_two_sigma_sq=inv_two_sigma_sq,
+                     adaptive=adaptive, truncate=truncate)
 
     # identical VPU reduction to the fused RowSum in kernels/affinity.py, so
     # the streaming engine's degrees (and hence its whole power trajectory)
@@ -230,13 +265,22 @@ def affinity_degree_streaming(
     interpret: bool = False,
     row_offset: jax.Array | int = 0,
     col_offset: jax.Array | int = 0,
+    scale_r: jax.Array | None = None,
+    scale_c: jax.Array | None = None,
+    thr: jax.Array | None = None,
 ) -> jax.Array:
     """Degree stripe D = A[stripe] @ 1 in one streamed sweep — the paper's
     AffinityMatrix + RowSum fusion (O1a) without the O(n^2) A write. With
     ``xc`` given, returns the partial row sums over that column block only
-    (the ring accumulates these across stages)."""
+    (the ring accumulates these across stages). ``scale_r``/``scale_c``/
+    ``thr`` apply the adaptive-scaling / truncation policies in-tile."""
     if xc is None:
         xc = x
+    adaptive = scale_r is not None
+    truncate = thr is not None
+    if adaptive and (kind != "rbf" or scale_c is None):
+        raise ValueError("adaptive scaling needs kind='rbf' and both "
+                         "scale_r and scale_c")
     n_rows, m = x.shape
     n_cols = xc.shape[0]
     rp = pl.cdiv(n_rows, tm) * tm
@@ -252,20 +296,26 @@ def affinity_degree_streaming(
         _streaming_degree_kernel,
         kind=kind, n_rows=n_rows, n_cols=n_cols, tm=tm, tn=tn,
         inv_two_sigma_sq=float(1.0 / (2.0 * sigma * sigma)),
+        adaptive=adaptive, truncate=truncate,
     )
+    in_specs = [
+        pl.BlockSpec((1, 2), lambda i, j: (0, 0),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((tm, m), lambda i, j: (i, 0)),
+        pl.BlockSpec((tn, m), lambda i, j: (j, 0)),
+        pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
+        pl.BlockSpec((tn, 1), lambda i, j: (j, 0)),
+    ]
+    operands = [off, xr32, xc32, sqr, sqc]
+    pol_specs, pol_ops = policy_specs_and_operands(
+        scale_r, scale_c, thr, tm=tm, tn=tn, rp=rp, cp=cp,
+        n_rows=n_rows, n_cols=n_cols)
     d = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 2), lambda i, j: (0, 0),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((tm, m), lambda i, j: (i, 0)),
-            pl.BlockSpec((tn, m), lambda i, j: (j, 0)),
-            pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((tn, 1), lambda i, j: (j, 0)),
-        ],
+        in_specs=in_specs + pol_specs,
         out_specs=pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rp, 1), jnp.float32),
         interpret=interpret,
-    )(off, xr32, xc32, sqr, sqc)
+    )(*operands, *pol_ops)
     return d[:n_rows, 0]

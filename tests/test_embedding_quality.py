@@ -9,16 +9,20 @@ PIC embedding collapses two of the three concentric circles (ARI 0.811,
 xfail'd since PR 1), while the orthogonalized 2-column block separates all
 three (ARI 1.0) — the PR 3 acceptance case.
 
-two_moons is intrinsically marginal at this sigma for every mode (the
-classic baseline scores ~0.5); its floors document that no mode regresses
-below the classic behaviour rather than claiming a solved dataset.
+two_moons is intrinsically marginal at this sigma for every DENSE mode
+(the classic baseline scores ~0.5); its dense floors document that no
+mode regresses below the classic behaviour. The kNN-truncated affinity
+spec (DESIGN.md §11) SOLVES it: the PR 5 acceptance class below asserts
+ARI >= 0.9 (measured 1.0) at the same sigma 0.25 under
+AffinitySpec(knn_k=30) with the orthogonal 2-column block — resolving the
+ROADMAP two_moons item with an affinity idea, exactly as it predicted.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import GPICConfig, adjusted_rand_index, run_gpic
+from repro.core import AffinitySpec, GPICConfig, adjusted_rand_index, run_gpic
 from repro.data import anisotropic, gaussians, three_circles, two_moons
 
 #: (dataset, generator, k, rbf sigma)
@@ -113,6 +117,60 @@ def test_ensemble_scalar_fields_are_the_true_final_state():
     assert res_ens.embeddings.shape == (480, 2)
     assert not np.array_equal(np.asarray(res_ens.embeddings[:, 0]),
                               np.asarray(res_ens.embedding))
+
+
+class TestKnnSpecQuality:
+    """The PR 5 acceptance: kNN-truncated / adaptive affinity specs on the
+    quality datasets, through the real front door. Floors are measured
+    values (all 1.0) minus margin; the headline is two_moons — marginal
+    for every dense mode (0.47-0.59), solved by graph truncation."""
+
+    def _run(self, name, spec, r=2, embedding="orthogonal"):
+        gen, k, _sigma = DATASETS[name]
+        x, y = gen(480, seed=0)
+        cfg = GPICConfig(affinity=spec, max_iter=400, n_vectors=r,
+                         embedding=embedding)
+        res = run_gpic(jnp.asarray(x), k, cfg, key=jax.random.key(1))
+        return res, adjusted_rand_index(y, np.asarray(res.labels))
+
+    def test_two_moons_knn_solved(self):
+        """ARI >= 0.9 at sigma 0.25 where every dense mode is ~0.5."""
+        res, ari = self._run(
+            "moons", AffinitySpec(kind="rbf", sigma=0.25, knn_k=30))
+        assert ari >= 0.9, f"moons under kNN spec: ARI {ari:.3f} < 0.9"
+
+    def test_two_moons_adaptive_knn_solved(self):
+        """The self-tuning route needs no sigma at all: adaptive local
+        scales + a tighter kNN graph also score >= 0.9 (measured 1.0)."""
+        _, ari = self._run(
+            "moons", AffinitySpec(kind="rbf", bandwidth="adaptive",
+                                  scale_k=7, knn_k=10))
+        assert ari >= 0.9, f"moons under adaptive+kNN: ARI {ari:.3f} < 0.9"
+
+    def test_three_circles_knn(self):
+        """Truncation must not regress the PR 3 nested-structure result."""
+        _, ari = self._run(
+            "three_circles", AffinitySpec(kind="rbf", sigma=0.3, knn_k=30))
+        assert ari >= 0.9
+
+    def test_blobs_knn(self):
+        _, ari = self._run(
+            "blobs", AffinitySpec(kind="rbf", sigma=0.3, knn_k=10))
+        assert ari >= 0.95
+
+    def test_streaming_engine_matches_on_the_acceptance_case(self):
+        """The moons win is engine-independent: the A-free streamed build
+        clusters identically to the explicit masked matrix."""
+        gen, k, _ = DATASETS["moons"]
+        x, _y = gen(480, seed=0)
+        spec = AffinitySpec(kind="rbf", sigma=0.25, knn_k=30)
+        cfg = GPICConfig(affinity=spec, max_iter=400, n_vectors=2,
+                         embedding="orthogonal")
+        r_e = run_gpic(jnp.asarray(x), k, cfg, key=jax.random.key(1))
+        r_s = run_gpic(jnp.asarray(x), k, cfg.with_(engine="streaming"),
+                       key=jax.random.key(1))
+        np.testing.assert_array_equal(np.asarray(r_e.labels),
+                                      np.asarray(r_s.labels))
 
 
 def test_qr_every_must_be_positive():

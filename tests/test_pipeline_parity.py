@@ -156,21 +156,91 @@ def test_parity_embedding_modes():
 
 
 @pytest.mark.slow
+def test_parity_affinity_specs():
+    """The ISSUE 5 parity case: adaptive local scaling and kNN truncation
+    (AffinitySpec, DESIGN.md §11) produce IDENTICAL labels and per-column
+    iteration counts on the 8-device mesh vs single device for the
+    explicit stripe build AND the streaming ring — pass 1 runs as stripe /
+    ring row-top-k reductions whose merged statistics equal the
+    single-device pass bitwise, so only the usual l1/psum reduction-order
+    noise remains (r pinned per combo where the late-column eps-crossings
+    are robust, the §9(b)/§10 discipline; the matrix-free engine rejects
+    non-factorable specs by design — asserted here too). The last combo
+    arms the subspace residual stopping rule on a truncated graph: the
+    residual reduces through op.gram/psum, so the early stop must fire at
+    the identical sweep on both sides.
+    """
+    out = _run_in_subprocess(
+        """
+        from repro.core import AffinitySpec
+        x, _ = gaussians(512, k=3, seed=0)
+        k = 3
+        xs = shard_points(x, mesh, "data")
+        knn = AffinitySpec(kind="rbf", sigma=0.3, knn_k=10)
+        ada = AffinitySpec(kind="rbf", bandwidth="adaptive", scale_k=7)
+        both = AffinitySpec(kind="rbf", bandwidth="adaptive", scale_k=7,
+                            knn_k=20)
+        combos = [("explicit", knn, 4, {}),
+                  ("streaming", knn, 2, {}),
+                  ("explicit", ada, 2, {}),
+                  ("streaming", ada, 1, {}),
+                  ("explicit", both, 2, {}),
+                  ("streaming", both, 2, {}),
+                  ("streaming", knn, 2,
+                   dict(embedding="orthogonal", residual_tol=1e-3))]
+        for path, spec, r, extra in combos:
+            cfg = GPICConfig(engine=path, affinity=spec, n_vectors=r,
+                             max_iter=100, **extra)
+            key = jax.random.key(1)
+            sd = run_gpic(jnp.asarray(x), k, cfg, key=key)
+            dist = run_gpic(xs, k, cfg.with_(mesh=mesh), key=key)
+            assert (np.asarray(sd.labels) == np.asarray(dist.labels)).all(), (
+                path, spec, r, "labels diverged")
+            assert (np.asarray(sd.n_iter_cols)
+                    == np.asarray(dist.n_iter_cols)).all(), (
+                path, spec, r, np.asarray(sd.n_iter_cols),
+                np.asarray(dist.n_iter_cols))
+            print("OK", path, spec.bandwidth, "knn=", spec.knn_k, "r=", r,
+                  "iters=", np.asarray(dist.n_iter_cols).tolist())
+        try:
+            run_gpic(xs, k, GPICConfig(engine="matrix_free", affinity=knn,
+                                       mesh=mesh), key=jax.random.key(1))
+        except ValueError as e:
+            assert "factorable" in str(e)
+            print("OK matrix_free-rejects-knn")
+        """
+    )
+    assert out.count("OK") == 8
+
+
+@pytest.mark.slow
 def test_streaming_ring_is_a_free():
     """The sharded streaming path's jaxpr contains no value as large as
     even one device's (n/P, n) affinity stripe — A is never materialized
     in any layout, which is the property that makes it the production
-    configuration (O(n·m/P) residency; DESIGN.md §9)."""
+    configuration (O(n·m/P) residency; DESIGN.md §9). Checked for the
+    dense spec AND an adaptive+kNN spec: the two-pass build's ring
+    row-top-k (pass 1) must stay as lean as the sweeps it feeds."""
     out = _run_in_subprocess(
         """
+        from repro.core import AffinitySpec
         from repro.core.distributed import distributed_gpic
         x, k = datasets()["rbf"]
         xs = shard_points(x, mesh, "data")
-        jaxpr = jax.make_jaxpr(
-            lambda xv, kv: distributed_gpic(
-                xv, k, key=kv, mesh=mesh, engine="streaming",
-                affinity_kind="rbf", sigma=0.3, max_iter=10)
-        )(xs, jax.random.key(1))
+        spec = AffinitySpec(kind="rbf", bandwidth="adaptive", scale_k=7,
+                            knn_k=10)
+        jaxprs = [
+            jax.make_jaxpr(
+                lambda xv, kv: distributed_gpic(
+                    xv, k, key=kv, mesh=mesh, engine="streaming",
+                    affinity_kind="rbf", sigma=0.3, max_iter=10)
+            )(xs, jax.random.key(1)),
+            jax.make_jaxpr(
+                lambda xv, kv: distributed_gpic(
+                    xv, k, key=kv, mesh=mesh, engine="streaming",
+                    affinity=spec, max_iter=10)
+            )(xs, jax.random.key(1)),
+        ]
         n = x.shape[0]
         stripe_elems = (n // 8) * n        # one device's A stripe
 
@@ -197,7 +267,8 @@ def test_streaming_ring_is_a_free():
                             return False
             return True
 
-        assert walk(jaxpr.jaxpr), "streaming ring materialized a big array"
+        for jaxpr in jaxprs:
+            assert walk(jaxpr.jaxpr), "streaming ring materialized a big array"
         print("OK ring-jaxpr-lean")
         """
     )
