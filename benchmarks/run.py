@@ -34,15 +34,16 @@ def main() -> None:
                     help="paper-scale sizes (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,table2,fig3,exp2,"
-                         "roofline,multivec,distributed,quality,affinity")
-    ap.add_argument("--json", nargs="?", const="BENCH_PR5.json", default=None,
+                         "roofline,multivec,distributed,quality,affinity,"
+                         "robustness")
+    ap.add_argument("--json", nargs="?", const="BENCH_PR6.json", default=None,
                     metavar="PATH",
-                    help="write a JSON perf snapshot (default BENCH_PR5.json)")
+                    help="write a JSON perf snapshot (default BENCH_PR6.json)")
     args = ap.parse_args()
 
     from . import (bench_affinity, bench_distributed, bench_exp2, bench_fig3,
-                   bench_multivec, bench_quality, bench_table1, bench_table2,
-                   roofline)
+                   bench_multivec, bench_quality, bench_robustness,
+                   bench_table1, bench_table2, roofline)
 
     jobs = {
         "table1": lambda: bench_table1.run(
@@ -71,6 +72,13 @@ def main() -> None:
         "affinity": lambda: bench_affinity.run(
             n=2048 if args.full else 1024,
             moons_n=960 if args.full else 480),
+        # the robustness subsystem: divergence-latch overhead vs the
+        # latch-free loop (budget asserted; fixed n — at 4096 the 5 s
+        # interpret-mode walls drown the sub-1% effect in timer noise),
+        # front-door validation cost, component-probe cost, and the fault
+        # matrix (every degenerate input must resolve to its contracted
+        # outcome — asserted)
+        "robustness": lambda: bench_robustness.run(n=2048),
     }
     selected = (args.only.split(",") if args.only else list(jobs))
 

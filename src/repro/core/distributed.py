@@ -48,6 +48,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .affinity import AffinityKind, AffinitySpec, as_affinity_spec
+from .health import HealthReport, count_bad_rows, graph_component_probe
 from .kmeans import kmeans
 from .operators import (
     _axis_tuple,
@@ -75,8 +76,8 @@ def _local_slice(idx, n_loc, arr):
 
 
 def _run_sharded(op, axes, *, key, u0t, k, eps, max_iter, kmeans_iters,
-                 embedding="pic", qr_every=1, snapshot_iters=None,
-                 residual_tol=None, force_reference=False):
+                 n_total, embedding="pic", qr_every=1, snapshot_iters=None,
+                 residual_tol=None, force_reference=False, probe=False):
     """Seed the local engine state from the operator's degrees, run THE
     convergence engine, gather once, and k-means the replicated embedding.
 
@@ -84,17 +85,22 @@ def _run_sharded(op, axes, *, key, u0t, k, eps, max_iter, kmeans_iters,
     local entry points use: the QR step's Gram partials run on each
     device's chunk and are finished by the operator's ``psum`` binding, and
     ensemble snapshots are taken on the local chunk and gathered once after
-    the loop — the sharded block algebra IS the single-device one.
-    Returns (labels, v_full, emb_full, t_cols, done): the replicated final
-    (n, r) engine state and the replicated (n, c) matrix that was
-    clustered (the same array unless ensemble widened it to c = r·S).
+    the loop — the sharded block algebra IS the single-device one. The
+    health arrays (per-column status, isolated-row count, the component
+    probe when ``probe`` arms) likewise finish through the operator's
+    reductions, so a sharded run reports the same diagnostics as the local
+    run of the same problem (DESIGN.md §12).
+    Returns (labels, v_full, emb_full, t_cols, done, status, iso, n_comp,
+    comp_full): the replicated final (n, r) engine state, the replicated
+    (n, c) matrix that was clustered (the same array unless ensemble
+    widened it to c = r·S), and the replicated health arrays.
     """
     idx = jax.lax.axis_index(_axis_tuple(axes))
     n_loc = op.degree.shape[0]
     u0t_loc = _local_slice(idx, n_loc, u0t)
     v0_loc = init_power_vectors_local(
         op.degree, u0t_loc, sum_fn=op.sum, dtype=jnp.float32)
-    v_loc, t_cols, done, emb_loc = run_power_embedding(
+    v_loc, t_cols, done, emb_loc, status = run_power_embedding(
         op, v0_loc, eps, max_iter, embedding=embedding, qr_every=qr_every,
         snapshot_iters=snapshot_iters, residual_tol=residual_tol)
     emb_full = op.all_gather(emb_loc)                   # once, after the loop
@@ -102,7 +108,16 @@ def _run_sharded(op, axes, *, key, u0t, k, eps, max_iter, kmeans_iters,
     emb = standardize_columns(emb_full)
     labels, _ = kmeans(key, emb, k, iters=kmeans_iters,
                        force_reference=force_reference)
-    return labels, v_full, emb_full, t_cols, done
+    iso = count_bad_rows(op.degree, sum_fn=op.sum)
+    if probe:
+        n_comp, comp_loc = graph_component_probe(
+            op, n_total, row_offset=idx * n_loc)
+        comp_full = op.all_gather(comp_loc)
+    else:
+        n_comp = jnp.int32(-1)
+        comp_full = jnp.full((n_total,), -1, jnp.int32)
+    return (labels, v_full, emb_full, t_cols, done,
+            status, iso, n_comp, comp_full)
 
 
 @functools.partial(
@@ -111,7 +126,7 @@ def _run_sharded(op, axes, *, key, u0t, k, eps, max_iter, kmeans_iters,
                      "affinity_kind", "sigma", "affinity", "eps_scale",
                      "a_dtype", "fold_shift", "n_vectors", "engine", "tile",
                      "use_pallas", "embedding", "qr_every", "snapshot_iters",
-                     "residual_tol"),
+                     "residual_tol", "probe_components", "inject_ring_fault"),
 )
 def distributed_gpic(
     x: jax.Array,
@@ -136,6 +151,8 @@ def distributed_gpic(
     qr_every: int = 1,
     snapshot_iters: tuple | None = None,
     residual_tol: float | None = None,
+    probe_components: bool = True,
+    inject_ring_fault: tuple | None = None,
 ) -> PICResult:
     """Sharded GPIC on the Pallas kernels (paper-faithful math, row stripes).
 
@@ -156,6 +173,11 @@ def distributed_gpic(
     ``embedding`` selects the block mode ('pic' | 'orthogonal' |
     'ensemble', DESIGN.md §10) — the QR/snapshot algebra runs through the
     operator's reduction primitives, so it is the single-device algebra.
+
+    ``probe_components`` runs the on-device disconnected-component check
+    when the spec truncates (DESIGN.md §12); ``inject_ring_fault``
+    (streaming engine only) poisons one ring stage's consumed block with
+    NaN — the fault-injection hook behind tests/test_robustness.py.
     """
     axes = _axis_tuple(shard_axes)
     n = x.shape[0]
@@ -163,6 +185,10 @@ def distributed_gpic(
     mesh_size = _mesh_size(mesh, axes)
     spec = as_affinity_spec(affinity, kind=affinity_kind, sigma=sigma)
     spec.validate_for_n(n)
+    if inject_ring_fault is not None and engine != "streaming":
+        raise ValueError(
+            "inject_ring_fault targets the streaming ring; "
+            f"engine={engine!r} has no ring stages")
     kkm, krand = jax.random.split(key)
     u0t = random_start_vectors(krand, n, n_vectors)
 
@@ -174,26 +200,31 @@ def distributed_gpic(
         elif engine == "streaming":
             op = sharded_streaming_operator(
                 x_loc, axes=axes, mesh_size=mesh_size, spec=spec,
-                tile=tile, use_pallas=use_pallas)
+                tile=tile, use_pallas=use_pallas,
+                inject_fault=inject_ring_fault)
         else:
             raise ValueError(f"unknown engine {engine!r} "
                              "(expected 'explicit' or 'streaming')")
         return _run_sharded(op, axes, key=key, u0t=u0t, k=k, eps=eps,
                             max_iter=max_iter, kmeans_iters=kmeans_iters,
-                            embedding=embedding, qr_every=qr_every,
+                            n_total=n, embedding=embedding,
+                            qr_every=qr_every,
                             snapshot_iters=snapshot_iters,
                             residual_tol=residual_tol,
-                            force_reference=not use_pallas)
+                            force_reference=not use_pallas,
+                            probe=probe_components and spec.truncated)
 
     out = shard_map(
         fn, mesh=mesh,
         in_specs=(P(axes), P(), P()),
-        out_specs=(P(), P(), P(), P(), P()),
+        out_specs=(P(),) * 9,
         check_rep=False,
     )(x, kkm, u0t)
-    labels, v, emb_full, t_cols, done = out
+    labels, v, emb_full, t_cols, done, status, iso, n_comp, comp = out
+    health = HealthReport(col_status=status, isolated_rows=iso,
+                          n_components=n_comp, components=comp)
     return make_pic_result(labels, v, t_cols, done, embedding=embedding,
-                           embeddings=emb_full)
+                           embeddings=emb_full, health=health)
 
 
 @functools.partial(
@@ -239,9 +270,11 @@ def distributed_gpic_matrix_free(
         op = sharded_matrix_free_operator(x_loc, axes=axes, spec=spec,
                                           use_pallas=use_pallas)
         # the sweep itself is jnp either way; the flag still governs k-means
+        # (factorable specs are never truncated — the probe cannot arm)
         return _run_sharded(op, axes, key=key, u0t=u0t, k=k, eps=eps,
                             max_iter=max_iter, kmeans_iters=kmeans_iters,
-                            embedding=embedding, qr_every=qr_every,
+                            n_total=n, embedding=embedding,
+                            qr_every=qr_every,
                             snapshot_iters=snapshot_iters,
                             residual_tol=residual_tol,
                             force_reference=not use_pallas)
@@ -249,12 +282,14 @@ def distributed_gpic_matrix_free(
     out = shard_map(
         fn, mesh=mesh,
         in_specs=(P(axes), P(), P()),
-        out_specs=(P(), P(), P(), P(), P()),
+        out_specs=(P(),) * 9,
         check_rep=False,
     )(x, kkm, u0t)
-    labels, v, emb_full, t_cols, done = out
+    labels, v, emb_full, t_cols, done, status, iso, n_comp, comp = out
+    health = HealthReport(col_status=status, isolated_rows=iso,
+                          n_components=n_comp, components=comp)
     return make_pic_result(labels, v, t_cols, done, embedding=embedding,
-                           embeddings=emb_full)
+                           embeddings=emb_full, health=health)
 
 
 def shard_points(x, mesh: Mesh, shard_axes="data"):

@@ -47,6 +47,7 @@ from .affinity import (
     as_affinity_spec,
     row_normalize_features,
 )
+from .health import HealthReport, count_bad_rows, graph_component_probe
 from .kmeans import kmeans
 from .operators import (
     explicit_operator,
@@ -71,6 +72,7 @@ _truncated_power_iteration = batched_power_iteration
         "k", "max_iter", "kmeans_iters", "affinity_kind", "sigma",
         "affinity", "n_vectors", "use_pallas", "tile", "engine", "a_dtype",
         "embedding", "qr_every", "snapshot_iters", "residual_tol",
+        "probe_components",
     ),
 )
 def gpic(
@@ -93,6 +95,7 @@ def gpic(
     qr_every: int = 1,
     snapshot_iters: tuple | None = None,
     residual_tol: float | None = None,
+    probe_components: bool = True,
 ) -> PICResult:
     """Accelerated PIC via the multi-vector power engine.
 
@@ -125,14 +128,32 @@ def gpic(
 
     kkm, krand = jax.random.split(key)
     v0 = init_power_vectors(krand, op.degree, n_vectors)
-    v, t_cols, done, emb_raw = run_power_embedding(
+    v, t_cols, done, emb_raw, status = run_power_embedding(
         op, v0, eps, max_iter, embedding=embedding, qr_every=qr_every,
         snapshot_iters=snapshot_iters, residual_tol=residual_tol)
     emb = standardize_columns(emb_raw)
     labels, _ = kmeans(kkm, emb, k, iters=kmeans_iters,
                        force_reference=not use_pallas)
+    health = _local_health(op, status, n, spec,
+                           probe_components=probe_components)
     return make_pic_result(labels, v, t_cols, done, embedding=embedding,
-                           embeddings=emb_raw)
+                           embeddings=emb_raw, health=health)
+
+
+def _local_health(op, status, n, spec, *, probe_components=True):
+    """Assemble the HealthReport of a local (single-chunk) run: isolated
+    rows from the operator's degrees, the disconnected-component probe
+    when the spec truncates (the only build that zeroes above-threshold
+    structure; dense graphs disconnect only by underflow, which the
+    isolated-row count already surfaces)."""
+    if probe_components and spec is not None and spec.truncated:
+        n_comp, comp = graph_component_probe(op, n)
+    else:
+        n_comp = jnp.int32(-1)
+        comp = jnp.full((n,), -1, jnp.int32)
+    return HealthReport(col_status=status,
+                        isolated_rows=count_bad_rows(op.degree),
+                        n_components=n_comp, components=comp)
 
 
 @functools.partial(
@@ -174,12 +195,14 @@ def gpic_matrix_free(
 
     kkm, krand = jax.random.split(key)
     v0 = init_power_vectors(krand, op.degree, n_vectors)
-    v, t_cols, done, emb_raw = run_power_embedding(
+    v, t_cols, done, emb_raw, status = run_power_embedding(
         op, v0, eps, max_iter, embedding=embedding, qr_every=qr_every,
         snapshot_iters=snapshot_iters, residual_tol=residual_tol)
     emb = standardize_columns(emb_raw)
     # the sweep itself is jnp either way; the flag still governs k-means
     labels, _ = kmeans(kkm, emb, k, iters=kmeans_iters,
                        force_reference=not use_pallas)
+    # factorable specs are never truncated — the probe cannot arm
+    health = _local_health(op, status, n, spec, probe_components=False)
     return make_pic_result(labels, v, t_cols, done, embedding=embedding,
-                           embeddings=emb_raw)
+                           embeddings=emb_raw, health=health)

@@ -61,27 +61,40 @@ def _canonicalize(labels: jax.Array, cents: jax.Array, k: int):
 @functools.partial(jax.jit, static_argnames=("k", "iters", "force_reference"))
 def kmeans(
     key: jax.Array, x: jax.Array, k: int, iters: int = 25,
-    force_reference: bool = False,
+    force_reference: bool = False, *, init: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Lloyd's algorithm. Returns (labels (n,), centroids (k, d)).
 
-    Empty clusters keep their previous centroid (standard fix; keeps the
-    update well-defined under jit). The assignment step runs the fused
-    Pallas kernel unless ``force_reference`` routes it to the jnp oracle.
-    Labels are canonicalized by first appearance (see ``_canonicalize``).
+    An emptied cluster is reseeded to the point farthest from its assigned
+    centroid (the i-th emptied cluster takes the i-th farthest point, so
+    multiple empties land on distinct points) — deterministic given the
+    seeded init, and it keeps all k clusters populated instead of letting
+    two centroids collapse onto one blob (the old keep-previous-centroid
+    fix could return fewer than k distinct labels under adversarial init).
+    The assignment step runs the fused Pallas kernel unless
+    ``force_reference`` routes it to the jnp oracle. Labels are
+    canonicalized by first appearance (see ``_canonicalize``).
+    ``init`` overrides the kmeans++ seeding with explicit (k, d) starting
+    centroids (robustness tests drive the empty-cluster reseed with it).
     """
     x = x.astype(jnp.float32)
-    cents = kmeans_plus_plus_init(key, x, k)
+    n = x.shape[0]
+    cents = (kmeans_plus_plus_init(key, x, k) if init is None
+             else jnp.asarray(init, jnp.float32))
 
     def step(cents, _):
-        assign, _d2 = ops.kmeans_assign(x, cents,
-                                        force_reference=force_reference)
+        assign, d2 = ops.kmeans_assign(x, cents,
+                                       force_reference=force_reference)
         onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)      # (n, k)
         counts = jnp.sum(onehot, axis=0)                        # (k,)
         sums = onehot.T @ x                                     # (k, d)
-        new = jnp.where(
-            counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], cents
-        )
+        empty = counts == 0
+        # farthest-point reseed: i-th empty slot takes the i-th farthest
+        # point (argsort is stable — deterministic under ties)
+        order = jnp.argsort(-d2)                                # (n,) desc
+        slot = jnp.clip(jnp.cumsum(empty) - 1, 0, n - 1)        # (k,)
+        new = jnp.where(empty[:, None], x[order[slot]],
+                        sums / jnp.maximum(counts, 1.0)[:, None])
         return new, None
 
     cents, _ = jax.lax.scan(step, cents, None, length=iters)

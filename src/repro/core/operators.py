@@ -148,8 +148,7 @@ def matrix_free_operator(xn, *, spec: AffinitySpec | None = None,
     d = matmat_matrix_free(xn, jnp.ones((n,), xn.dtype), spec)
 
     def matmat(v):
-        return matmat_matrix_free(xn, v, spec) / jnp.maximum(
-            d, 1e-30)[:, None]
+        return matmat_matrix_free(xn, v, spec) / jnp.maximum(d, 1e-30)[:, None]
 
     return PowerOperator(matmat=matmat, degree=d,
                          gram=_gram_binding(use_pallas))
@@ -277,7 +276,9 @@ def sharded_streaming_operator(x_loc, *, axes, mesh_size: int,
                                spec: AffinitySpec | None = None,
                                kind: AffinityKind = "cosine_shifted",
                                sigma: float = 1.0, tile: int | None = None,
-                               use_pallas: bool = True) -> PowerOperator:
+                               use_pallas: bool = True,
+                               inject_fault: tuple | None = None
+                               ) -> PowerOperator:
     """Row-striped A-free engine: each sweep ring-rotates the (n/P, m)
     feature blocks (and the matching V blocks) around the mesh with
     ``ppermute``; every stage regenerates the (n/P, n/P) affinity stripe
@@ -303,7 +304,19 @@ def sharded_streaming_operator(x_loc, *, axes, mesh_size: int,
     stages), moving O(n(m+r)/P) bytes each — O(n(m+r)) total per device,
     the all-gather equivalent, but with O(n m / P) residency instead of
     O(n m).
+
+    ``inject_fault`` (static; fault-injection harness only, DESIGN.md §12)
+    corrupts one mat-mat ring stage: ``("ring_nan", s)`` poisons the V
+    block consumed at stage ``s`` of every sweep with NaN — a simulated
+    transient interconnect corruption the power loop's non-finite latches
+    must detect and contain.
     """
+    if inject_fault is not None and (
+            len(inject_fault) != 2 or inject_fault[0] != "ring_nan"
+            or not 0 <= int(inject_fault[1]) < mesh_size):
+        raise ValueError(
+            f"inject_fault must be ('ring_nan', stage<{mesh_size}), got "
+            f"{inject_fault!r}")
     spec = as_affinity_spec(spec, kind=kind, sigma=sigma)
     psum, pmax, gather = mesh_reductions(axes)
     axes_t = _axis_tuple(axes)
@@ -383,6 +396,12 @@ def sharded_streaming_operator(x_loc, *, axes, mesh_size: int,
 
     def matmat(v_loc):
         def partial(s, x_ring, v_ring):
+            if inject_fault is not None:
+                # poison only the block CONSUMED at the faulted stage (the
+                # rotating carry stays clean — a transient corruption, not
+                # a persistently dead link)
+                v_ring = jnp.where(s == int(inject_fault[1]),
+                                   jnp.float32(jnp.nan), v_ring)
             scl_r, scl_c = _stage_scales(s)
             return ops.streaming_matmat(
                 x_loc, v_ring, None, x_ring, spec=spec,

@@ -26,6 +26,7 @@ from .affinity import (
     affinity_matrix,
     as_affinity_spec,
 )
+from .health import HealthReport, count_bad_rows
 from .kmeans import kmeans
 from .power import (
     batched_power_iteration,
@@ -50,10 +51,14 @@ class PICResult:
     #: which embedding mode ('pic' | 'orthogonal' | 'ensemble') produced
     #: ``embeddings`` — static metadata, not a traced leaf
     embedding_mode: str = field(metadata=dict(static=True), default="pic")
+    #: per-run diagnostics (core/health.py, DESIGN.md §12): per-column
+    #: COL_* status codes, isolated-row count, component probe results.
+    #: None only for hand-built results that skipped the engine.
+    health: Optional[HealthReport] = None
 
 
 def make_pic_result(labels, v, t_cols, done, *, embedding="pic",
-                    embeddings=None) -> PICResult:
+                    embeddings=None, health=None) -> PICResult:
     """Assemble a PICResult from the engine outputs: labels (n,), the final
     (n, r) state, and the per-column (r,) iteration counts / flags. Column 0
     (the paper's degree-seeded vector) backs the scalar back-compat fields;
@@ -62,12 +67,14 @@ def make_pic_result(labels, v, t_cols, done, *, embedding="pic",
     ``embedding`` records which embedding mode produced the clustered
     matrix; ``embeddings`` overrides that matrix when it is wider than the
     engine state (the ensemble concatenation) — ``v`` still supplies the
-    column-0 scalars.
+    column-0 scalars. ``health`` attaches the run's
+    :class:`~repro.core.health.HealthReport`.
     """
     return PICResult(
         labels=labels, embedding=v[:, 0], n_iter=t_cols[0], converged=done[0],
         embeddings=v if embeddings is None else embeddings,
         n_iter_cols=t_cols, converged_cols=done, embedding_mode=embedding,
+        health=health,
     )
 
 
@@ -175,18 +182,26 @@ def pic_from_affinity(
     if eps is None:
         eps = 1e-5 / n
     d = jnp.sum(a, axis=1)
-    w = a / jnp.maximum(d, 1e-30)[:, None]
+    # masked normalization: an isolated row (zero or non-finite degree)
+    # contributes an exact-zero W row instead of a 1e30-scaled junk one;
+    # healthy rows divide bitwise as before (DESIGN.md §12)
+    dok = d > 0
+    w = jnp.where(dok[:, None], a / jnp.where(dok, d, 1.0)[:, None], 0.0)
 
     kkm, krand = jax.random.split(key)
     v0 = init_power_vectors(krand, d, n_vectors, dtype=a.dtype)
-    v, t_cols, done, emb_raw = run_power_embedding(
+    v, t_cols, done, emb_raw, status = run_power_embedding(
         lambda vv: w @ vv, v0, eps, max_iter, embedding=embedding,
         qr_every=qr_every, snapshot_iters=snapshot_iters,
         residual_tol=residual_tol)
     emb = standardize_columns(emb_raw)
     labels, _cent = kmeans(kkm, emb, k, iters=kmeans_iters)
+    health = HealthReport(
+        col_status=status, isolated_rows=count_bad_rows(d),
+        n_components=jnp.int32(-1),        # no spec here — probe not armed
+        components=jnp.full((n,), -1, jnp.int32))
     return make_pic_result(labels, v, t_cols, done, embedding=embedding,
-                           embeddings=emb_raw)
+                           embeddings=emb_raw, health=health)
 
 
 # ---------------------------------------------------------------------------

@@ -36,9 +36,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from ..kernels import ops
 from .affinity import AffinityKind, AffinitySpec, as_affinity_spec
 from .distributed import distributed_gpic, distributed_gpic_matrix_free
 from .gpic import gpic, gpic_matrix_free
+from .health import raise_for_health, validate_features
 from .pic import PICResult
 from .power import EMBEDDINGS
 
@@ -92,6 +94,15 @@ class GPICConfig:
       use_pallas:   False routes every op to the jnp reference oracles.
       seed:         key for k-means init + extra power vectors when
                     ``run_gpic`` isn't handed an explicit key.
+
+    Robustness (DESIGN.md §12):
+      sanitize:     zero-fill non-finite feature values at the front door
+                    (recorded in ``PICResult.health.notes``) instead of
+                    raising :class:`~repro.core.health.NonFiniteInputError`.
+      component_probe: run the on-device disconnected-component check on
+                    truncated (kNN) graphs; the count lands in
+                    ``PICResult.health.n_components``. False skips the
+                    probe's extra sweeps.
     """
     engine: str = "explicit"
     mesh: Mesh | None = None
@@ -112,6 +123,8 @@ class GPICConfig:
     tile: int | None = None
     use_pallas: bool = True
     seed: int = 0
+    sanitize: bool = False
+    component_probe: bool = True
 
     def with_(self, **updates) -> "GPICConfig":
         """Functional update (``dataclasses.replace`` with a shorter name)."""
@@ -130,8 +143,15 @@ def run_gpic(
 
     ``x`` is the (n, m) feature matrix — row-sharded on ``config.mesh``
     for distributed runs (see ``shard_points``), a plain array otherwise.
-    Returns the extended :class:`PICResult` (full (n, r) embedding and
-    per-column iteration stats included).
+    Returns the extended :class:`PICResult` (full (n, r) embedding,
+    per-column iteration stats, and the populated ``health`` report).
+
+    Robustness contract (DESIGN.md §12): degenerate inputs raise a typed
+    :class:`~repro.core.health.GPICError` subclass at the front door
+    (non-finite features unless ``sanitize``, n < k, constant rows) or
+    after the run (every row isolated, every power column dead); anything
+    less total returns normally with the damage described in
+    ``result.health`` — never silent garbage.
     """
     cfg = config or GPICConfig()
     if overrides:
@@ -212,6 +232,11 @@ def run_gpic(
     if key is None:
         key = jax.random.key(cfg.seed)
 
+    # front-door input validation (typed errors; value checks skip under
+    # a tracer and the device-side latches carry the load)
+    x, health_notes = validate_features(x, k, sanitize=cfg.sanitize)
+    fallbacks_before = ops.kernel_fallbacks()
+
     snapshot_iters = (None if cfg.snapshot_iters is None
                       else tuple(cfg.snapshot_iters))
     common = dict(key=key, max_iter=cfg.max_iter,
@@ -223,21 +248,38 @@ def run_gpic(
 
     if cfg.mesh is None:
         if cfg.engine == "matrix_free":
-            return gpic_matrix_free(x, k, eps=cfg.eps_scale / x.shape[0],
-                                    use_pallas=cfg.use_pallas, **common)
-        return gpic(
-            x, k, engine=cfg.engine, a_dtype=cfg.a_dtype,
-            tile=cfg.tile, use_pallas=cfg.use_pallas,
-            eps=cfg.eps_scale / x.shape[0], **common)
+            res = gpic_matrix_free(x, k, eps=cfg.eps_scale / x.shape[0],
+                                   use_pallas=cfg.use_pallas, **common)
+        else:
+            res = gpic(
+                x, k, engine=cfg.engine, a_dtype=cfg.a_dtype,
+                tile=cfg.tile, use_pallas=cfg.use_pallas,
+                eps=cfg.eps_scale / x.shape[0],
+                probe_components=cfg.component_probe, **common)
+    else:
+        shard_axes = (cfg.shard_axes if isinstance(cfg.shard_axes, str)
+                      else tuple(cfg.shard_axes))
+        if cfg.engine == "matrix_free":
+            res = distributed_gpic_matrix_free(
+                x, k, mesh=cfg.mesh, shard_axes=shard_axes,
+                eps_scale=cfg.eps_scale, use_pallas=cfg.use_pallas, **common)
+        else:
+            res = distributed_gpic(
+                x, k, mesh=cfg.mesh, shard_axes=shard_axes,
+                engine=cfg.engine, eps_scale=cfg.eps_scale,
+                a_dtype=cfg.a_dtype, fold_shift=cfg.fold_shift,
+                tile=cfg.tile, use_pallas=cfg.use_pallas,
+                probe_components=cfg.component_probe, **common)
 
-    shard_axes = (cfg.shard_axes if isinstance(cfg.shard_axes, str)
-                  else tuple(cfg.shard_axes))
-    if cfg.engine == "matrix_free":
-        return distributed_gpic_matrix_free(
-            x, k, mesh=cfg.mesh, shard_axes=shard_axes,
-            eps_scale=cfg.eps_scale, use_pallas=cfg.use_pallas, **common)
-    return distributed_gpic(
-        x, k, mesh=cfg.mesh, shard_axes=shard_axes, engine=cfg.engine,
-        eps_scale=cfg.eps_scale, a_dtype=cfg.a_dtype,
-        fold_shift=cfg.fold_shift, tile=cfg.tile, use_pallas=cfg.use_pallas,
-        **common)
+    # attach host-side events (sanitization, kernel fallbacks that first
+    # fired during this run) and apply the unusable-result checks
+    new_fallbacks = tuple(
+        f"kernel_fallback:{op}" for op in sorted(ops.kernel_fallbacks())
+        if op not in fallbacks_before)
+    notes = tuple(health_notes) + new_fallbacks
+    if res.health is not None and notes:
+        res = replace(res, health=replace(
+            res.health, notes=res.health.notes + notes))
+    if res.health is not None:
+        raise_for_health(res.health, x.shape[0])
+    return res

@@ -50,7 +50,15 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+from .health import COL_MAXITER, COL_NONFINITE, COL_STALLED, COL_ZERO
+
 EMBEDDINGS = ("pic", "orthogonal", "ensemble")
+
+#: sweeps without a strict improvement of a column's acceleration statistic
+#: before COL_STALLED latches (periodic/oscillating trajectories never
+#: improve; slowly-converging ones improve every sweep) — diagnostic only,
+#: the stall latch never stops or alters the iteration
+STALL_PATIENCE = 10
 
 
 def _identity(x):
@@ -149,20 +157,24 @@ def subspace_residual(op, v, u):
     g = op.sum(op.gram(jnp.concatenate([v, u], axis=1)))       # (2r, 2r)
     gvv, gvu, guu = g[:r, :r], g[:r, r:], g[r:, r:]
     lam = jnp.linalg.solve(gvv, gvu)
-    res2 = jnp.trace(guu) - jnp.trace(gvu.T @ lam)
-    rel = jnp.sqrt(jnp.maximum(res2, 0.0)
-                   / jnp.maximum(jnp.trace(guu), 1e-30))
+    denom = jnp.trace(guu)
+    res2 = denom - jnp.trace(gvu.T @ lam)
+    rel = jnp.sqrt(jnp.maximum(res2, 0.0) / jnp.maximum(denom, 1e-30))
     # a singular Gram (columns momentarily aligned) solves to non-finite;
     # report "not converged" and let the next QR re-mix, mirroring the
-    # orthonormalize_block skip guard
-    return jnp.where(jnp.isfinite(rel), rel, jnp.inf)
+    # orthonormalize_block skip guard. A zero U (all-zero columns after a
+    # dead sweep) makes the statistic 0/0 -> 0 — a FALSE "converged"; the
+    # denom > 0 gate reports inf instead so a dead block can never
+    # satisfy the residual rule.
+    return jnp.where(jnp.isfinite(rel) & (denom > 0), rel, jnp.inf)
 
 
 def _power_loop(op, v0, eps, max_iter, mode, qr_every, snapshot_iters,
-                residual_tol=None):
+                residual_tol=None, collect_health=True):
     """The one convergence loop behind every embedding mode. Returns
-    (t, V, t_cols, done, snaps) with snaps (n_loc, r, S) holding the block
-    at each requested iteration count (S = len(snapshot_iters)).
+    (t, V, t_cols, done, snaps, status) with snaps (n_loc, r, S) holding
+    the block at each requested iteration count (S = len(snapshot_iters))
+    and status the (r,) int32 per-column COL_* health bitmask.
 
     ``residual_tol`` (static; block mode only) arms the subspace residual
     stopping rule: on every QR step, once the pinned column 0 has converged
@@ -170,6 +182,17 @@ def _power_loop(op, v0, eps, max_iter, mode, qr_every, snapshot_iters,
     latches ALL remaining columns done — the block stops at subspace
     convergence instead of running to max_iter. None (the default) compiles
     the exact PR-3 loop.
+
+    ``collect_health`` (static) arms the divergence latches: a column whose
+    L1 mass hits exact zero (COL_ZERO) or that produced a NaN/Inf
+    (COL_NONFINITE) is zeroed and latched done — the fault can never
+    propagate into other columns through a later QR — and a column whose
+    acceleration statistic stops improving for STALL_PATIENCE sweeps is
+    flagged COL_STALLED (diagnostic only). On a clean run every latch
+    predicate is False, so the selected values are bitwise the unlatched
+    ones — the health layer is a pure observer (DESIGN.md §12).
+    ``collect_health=False`` compiles the loop without the latch
+    computations (the benchmark baseline for pricing them).
     """
     if mode not in ("pic", "orthogonal"):
         raise ValueError(
@@ -192,14 +215,37 @@ def _power_loop(op, v0, eps, max_iter, mode, qr_every, snapshot_iters,
             "never arm")
 
     def cond(state):
-        t, _v, _delta, done, _t_cols, _snaps = state
+        t, _v, _delta, done = state[:4]
         return jnp.logical_and(t < max_iter, jnp.logical_not(jnp.all(done)))
 
     def body(state):
-        t, v, delta, done, t_cols, snaps = state
+        t, v, delta, done, t_cols, snaps, status, best, since = state
         u = op.matmat(v)                                        # (n_loc, r)
         l1 = op.sum(jnp.sum(jnp.abs(u), axis=0))                # (r,)
         v_next = u / jnp.maximum(l1, 1e-30)[None, :]
+        fault = jnp.zeros((r,), bool)
+        if collect_health:
+            # per-column fault latches: exact-zero L1 mass (the column has
+            # no signal left — e.g. an all-zero v0 column, previously a
+            # hidden 0/0 frozen forever without reporting) and NaN/Inf
+            # (non-finite input or a corrupted sweep). A faulted column is
+            # zeroed so the damage cannot leak into other columns through
+            # a later QR, and latched done. Both tests read the ALREADY
+            # computed (and already cross-chunk-summed) l1 — a NaN/Inf
+            # anywhere in the column propagates into its absolute sum, so
+            # no additional (n, r) reduction is introduced (adding one
+            # perturbs XLA's fusion of the existing loop reductions enough
+            # to shift boundary eps-crossings in interpret mode, breaking
+            # the local/sharded parity discipline) and every shard latches
+            # identically off the replicated value.
+            zero_col = l1 <= 0.0                                # (r,)
+            bad_col = jnp.logical_not(jnp.isfinite(l1))         # (r,)
+            fault = (zero_col | bad_col) & ~done
+            v_next = jnp.where(fault[None, :], 0.0, v_next)
+            status = (status
+                      | jnp.where(zero_col & fault, COL_ZERO, 0)
+                      | jnp.where(bad_col & fault, COL_NONFINITE, 0)
+                      ).astype(jnp.int32)
         qr_now = (t + 1) % qr_every == 0
         if block:
             if qr_every == 1:
@@ -221,6 +267,20 @@ def _power_loop(op, v0, eps, max_iter, mode, qr_every, snapshot_iters,
         delta_next = jnp.where(freeze[None, :], delta, delta_next)
         t_cols = t_cols + jnp.where(done, 0, 1).astype(jnp.int32)
         done = jnp.logical_or(done, accel <= eps)
+        if collect_health:
+            done = jnp.logical_or(done, fault)
+            # stall detector: a column whose acceleration statistic has not
+            # strictly improved on its best for STALL_PATIENCE sweeps is
+            # flagged (periodic trajectories — e.g. a bipartite graph's
+            # oscillation — repeat their accel values forever). Diagnostic
+            # only: the flag never stops or alters the iteration.
+            improved = accel < best
+            since = jnp.where(done | improved, 0, since + 1).astype(
+                jnp.int32)
+            best = jnp.minimum(best, accel)
+            status = (status | jnp.where(
+                ~done & (since >= STALL_PATIENCE), COL_STALLED, 0)
+            ).astype(jnp.int32)
         if residual:
             # priced at QR cadence only; gating on done[0] keeps column 0's
             # classic n_iter/converged stats bitwise (the subspace never
@@ -233,19 +293,28 @@ def _power_loop(op, v0, eps, max_iter, mode, qr_every, snapshot_iters,
         for j, s in enumerate(snapshot_iters):
             snaps = snaps.at[:, :, j].set(
                 jnp.where(t + 1 == s, v_next, snaps[:, :, j]))
-        return t + 1, v_next, delta_next, done, t_cols, snaps
+        return (t + 1, v_next, delta_next, done, t_cols, snaps,
+                status, best, since)
 
     state = (
         jnp.int32(0), v0, v0,                      # delta_0 <- v_0 (line 1)
         jnp.zeros((r,), bool), jnp.zeros((r,), jnp.int32),
         jnp.zeros(v0.shape + (len(snapshot_iters),), v0.dtype),
+        jnp.zeros((r,), jnp.int32),                # status
+        jnp.full((r,), jnp.inf, jnp.float32),      # best accel (stall)
+        jnp.zeros((r,), jnp.int32),                # sweeps since improved
     )
-    t, v, _delta, done, t_cols, snaps = jax.lax.while_loop(cond, body, state)
-    return t, v, t_cols, done, snaps
+    (t, v, _delta, done, t_cols, snaps,
+     status, _best, _since) = jax.lax.while_loop(cond, body, state)
+    if collect_health:
+        status = (status | jnp.where(~done, COL_MAXITER, 0)).astype(
+            jnp.int32)
+    return t, v, t_cols, done, snaps, status
 
 
 def batched_power_iteration(op, v0, eps, max_iter, *, mode="pic",
-                            qr_every=1, residual_tol=None):
+                            qr_every=1, residual_tol=None,
+                            collect_health=True, return_status=False):
     """Run the truncated power iteration on batched state.
 
     Args:
@@ -263,16 +332,25 @@ def batched_power_iteration(op, v0, eps, max_iter, *, mode="pic",
         with r > 1 only): once column 0 has converged classically, a
         relative ||WV − VΛ|| residual <= residual_tol on a QR step stops
         the whole block (None — the default — runs the PR-3 loop bitwise).
+      collect_health: arm the per-column divergence latches (zero-mass,
+        non-finite, stall — see ``_power_loop``); False compiles the loop
+        without them (the guard-overhead benchmark baseline).
+      return_status: also return the (r,) int32 COL_* status bitmask as a
+        fourth element (kept opt-in so the historical 3-tuple unpacking
+        keeps working).
 
     Returns:
       (V, t_cols, done): final local (n_loc, r) state, per-column iteration
-      counts (r,) int32, and per-column convergence flags (r,) bool. The
-      counts/flags are replicated across chunks; gather V with
-      ``op.all_gather`` if the full embedding is needed.
+      counts (r,) int32, and per-column convergence flags (r,) bool — plus
+      the (r,) status mask when ``return_status``. The counts/flags are
+      replicated across chunks; gather V with ``op.all_gather`` if the
+      full embedding is needed.
     """
-    _t, v, t_cols, done, _snaps = _power_loop(
+    _t, v, t_cols, done, _snaps, status = _power_loop(
         op, v0, eps, max_iter, mode, qr_every, (),
-        residual_tol=residual_tol)
+        residual_tol=residual_tol, collect_health=collect_health)
+    if return_status:
+        return v, t_cols, done, status
     return v, t_cols, done
 
 
@@ -295,11 +373,11 @@ def ensemble_power_iteration(op, v0, eps, max_iter, *,
     constant once every column has converged, so snapshots past an early
     exit are backfilled with the final (frozen) block — no extra sweeps.
 
-    Returns (snaps, t_cols, done, v): the (n_loc, r, S) snapshot stack plus
-    the loop's ACTUAL final state v (== snaps[:, :, -1] whenever the last
-    snapshot time is max_iter or past the exit; later if a custom schedule
-    ends before convergence). Flatten snaps to the k-means embedding with
-    :func:`ensemble_embedding`.
+    Returns (snaps, t_cols, done, v, status): the (n_loc, r, S) snapshot
+    stack plus the loop's ACTUAL final state v (== snaps[:, :, -1] whenever
+    the last snapshot time is max_iter or past the exit; later if a custom
+    schedule ends before convergence) and the (r,) COL_* status mask.
+    Flatten snaps to the k-means embedding with :func:`ensemble_embedding`.
     """
     snapshot_iters = tuple(
         int(s) for s in (snapshot_iters if snapshot_iters is not None
@@ -313,11 +391,11 @@ def ensemble_power_iteration(op, v0, eps, max_iter, *,
         raise ValueError(
             f"snapshot_iters {snapshot_iters!r} must lie in [1, max_iter="
             f"{max_iter}]")
-    t, v, t_cols, done, snaps = _power_loop(
+    t, v, t_cols, done, snaps, status = _power_loop(
         op, v0, eps, max_iter, "pic", 1, snapshot_iters)
     written = jnp.asarray(snapshot_iters, jnp.int32) <= t         # (S,)
     snaps = jnp.where(written[None, None, :], snaps, v[:, :, None])
-    return snaps, t_cols, done, v
+    return snaps, t_cols, done, v, status
 
 
 def run_power_embedding(op, v0, eps, max_iter, *, embedding="pic",
@@ -325,10 +403,10 @@ def run_power_embedding(op, v0, eps, max_iter, *, embedding="pic",
     """Run the engine in the requested embedding mode — the one helper every
     entry point (local, sharded, oracle) calls, so mode routing exists once.
 
-    Returns (v, t_cols, done, emb): the final local (n_loc, r) state, the
-    per-column stats, and the LOCAL chunk of the matrix to cluster (the
-    state itself for 'pic'/'orthogonal'; the (n_loc, r·S) snapshot
-    concatenation for 'ensemble').
+    Returns (v, t_cols, done, emb, status): the final local (n_loc, r)
+    state, the per-column stats, the LOCAL chunk of the matrix to cluster
+    (the state itself for 'pic'/'orthogonal'; the (n_loc, r·S) snapshot
+    concatenation for 'ensemble'), and the (r,) int32 COL_* health mask.
     """
     if embedding not in EMBEDDINGS:
         raise ValueError(
@@ -338,13 +416,13 @@ def run_power_embedding(op, v0, eps, max_iter, *, embedding="pic",
             "residual_tol arms the subspace residual stopping rule of "
             "embedding='orthogonal' only")
     if embedding == "ensemble":
-        snaps, t_cols, done, v = ensemble_power_iteration(
+        snaps, t_cols, done, v, status = ensemble_power_iteration(
             op, v0, eps, max_iter, snapshot_iters=snapshot_iters)
-        return v, t_cols, done, ensemble_embedding(snaps)
-    v, t_cols, done = batched_power_iteration(
+        return v, t_cols, done, ensemble_embedding(snaps), status
+    v, t_cols, done, status = batched_power_iteration(
         op, v0, eps, max_iter, mode=embedding, qr_every=qr_every,
-        residual_tol=residual_tol)
-    return v, t_cols, done, v
+        residual_tol=residual_tol, return_status=True)
+    return v, t_cols, done, v, status
 
 
 def ensemble_embedding(snaps):

@@ -20,9 +20,16 @@ process) and can be pinned explicitly for CI / TPU runs with the
 
 Tile sizes default to the static autotuner in kernels/tuning.py; pass
 ``tm``/``tn`` to override.
+
+Graceful degradation (DESIGN.md §12): every public wrapper guards its
+kernel dispatch — a Pallas lowering/compile failure (or a fault injected
+with ``forced_kernel_failure``) degrades that op to the 'reference' oracle
+for the rest of the process and records the reason in
+``kernel_fallbacks()``, which the pipeline surfaces as health notes.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 from typing import Callable
 
@@ -100,6 +107,57 @@ def _resolve_mode(mode: str | None, force_reference: bool,
     return "reference" if force_reference else default
 
 
+# ---------------------------------------------------------------------------
+# Graceful degradation: per-op kernel → reference fallback (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+_FALLBACKS: dict[str, str] = {}
+_FORCED_FAILURES: dict[str, str] = {}
+
+
+def kernel_fallbacks() -> dict[str, str]:
+    """Snapshot of ops that have degraded to the reference oracle in this
+    process: ``{op: reason}``. The pipeline diffs this around each entry
+    call to attach ``kernel_fallback:<op>`` notes to the health report."""
+    return dict(_FALLBACKS)
+
+
+def reset_kernel_fallbacks() -> None:
+    """Forget recorded fallbacks so ops dispatch to kernels again. Pair
+    with ``jax.clear_caches()``: dispatch happens at trace time, so a
+    cached jit program keeps whatever path it was traced with."""
+    _FALLBACKS.clear()
+
+
+@contextlib.contextmanager
+def forced_kernel_failure(op: str, reason: str = "forced kernel failure"):
+    """Fault injection: make the next kernel dispatch of ``op`` raise, so
+    the guarded wrapper exercises its reference fallback. Pair with
+    ``jax.clear_caches()`` before AND after — dispatch is a trace-time
+    decision, so cached programs bypass both the fault and the recovery."""
+    _FORCED_FAILURES[op] = reason
+    try:
+        yield
+    finally:
+        _FORCED_FAILURES.pop(op, None)
+
+
+def _guarded(op: str, kernel_thunk: Callable, ref_thunk: Callable):
+    """Run the fused kernel; if it raises (Pallas lowering/compile failure
+    or an injected fault), degrade to the jnp reference oracle, record the
+    reason once, and keep serving the oracle for the rest of the process.
+    Same math, unfused HLO — a slow correct answer instead of a crash."""
+    if op in _FALLBACKS:
+        return ref_thunk()
+    try:
+        if op in _FORCED_FAILURES:
+            raise RuntimeError(_FORCED_FAILURES[op])
+        return kernel_thunk()
+    except Exception as e:  # noqa: BLE001 — any lowering failure degrades
+        _FALLBACKS[op] = f"{type(e).__name__}: {e}"
+        return ref_thunk()
+
+
 def _tiles(n: int, tm: int | None, tn: int | None, *, r: int = 1,
            m: int = 0, a_bytes: int = 4) -> tuple[int, int]:
     """Resolve (tm, tn): explicit overrides win, else the static autotuner
@@ -173,21 +231,26 @@ def affinity_and_degree(xn, xc=None, *, kind="cosine_shifted", sigma=1.0,
     """
     kind, sigma = _spec_kind_sigma(spec, kind, sigma)
     mode = _resolve_mode(mode, force_reference)
-    if mode == "reference":
+
+    def _ref():
         a, deg = ref.affinity_and_degree_ref(
             xn, xc, kind=kind, sigma=sigma,
             row_offset=row_offset, col_offset=col_offset,
             scale_r=scale_r, scale_c=scale_c, thr=thr)
         return a.astype(out_dtype), deg   # honor O4 storage dtype here too
+
+    if mode == "reference":
+        return _ref()
     n = max(xn.shape[0], xn.shape[0] if xc is None else xc.shape[0])
-    tm, tn = _tiles(n, tm, tn, m=xn.shape[1],
-                    a_bytes=jnp.dtype(out_dtype).itemsize)
-    return dispatch("affinity_and_degree", mode)(
-        xn, xc, kind=kind, sigma=sigma, tm=tm, tn=tn, out_dtype=out_dtype,
+    tm_, tn_ = _tiles(n, tm, tn, m=xn.shape[1],
+                      a_bytes=jnp.dtype(out_dtype).itemsize)
+    return _guarded("affinity_and_degree", lambda: dispatch(
+        "affinity_and_degree", mode)(
+        xn, xc, kind=kind, sigma=sigma, tm=tm_, tn=tn_, out_dtype=out_dtype,
         row_offset=row_offset, col_offset=col_offset,
         scale_r=scale_r, scale_c=scale_c, thr=thr,
         interpret=_interpret(),
-    )
+    ), _ref)
 
 
 def degree_normalized_matvec(a, v, d, *, tm=None, tn=None,
@@ -196,10 +259,11 @@ def degree_normalized_matvec(a, v, d, *, tm=None, tn=None,
     mode = _resolve_mode(mode, force_reference)
     if mode == "reference":
         return ref.degree_normalized_matvec_ref(a, v, d)
-    tm, tn = _tiles(a.shape[0], tm, tn, a_bytes=a.dtype.itemsize)
-    return dispatch("degree_normalized_matvec", mode)(
-        a, v, d, tm=tm, tn=tn, interpret=_interpret()
-    )
+    tm_, tn_ = _tiles(a.shape[0], tm, tn, a_bytes=a.dtype.itemsize)
+    return _guarded("degree_normalized_matvec", lambda: dispatch(
+        "degree_normalized_matvec", mode)(
+        a, v, d, tm=tm_, tn=tn_, interpret=_interpret()
+    ), lambda: ref.degree_normalized_matvec_ref(a, v, d))
 
 
 def degree_normalized_matmat(a, v, d, *, tm=None, tn=None,
@@ -212,11 +276,12 @@ def degree_normalized_matmat(a, v, d, *, tm=None, tn=None,
     mode = _resolve_mode(mode, force_reference)
     if mode == "reference":
         return ref.degree_normalized_matmat_ref(a, v, d)
-    tm, tn = _tiles(max(a.shape), tm, tn, r=v.shape[1],
-                    a_bytes=a.dtype.itemsize)
-    return dispatch("degree_normalized_matmat", mode)(
-        a, v, d, tm=tm, tn=tn, interpret=_interpret()
-    )
+    tm_, tn_ = _tiles(max(a.shape), tm, tn, r=v.shape[1],
+                      a_bytes=a.dtype.itemsize)
+    return _guarded("degree_normalized_matmat", lambda: dispatch(
+        "degree_normalized_matmat", mode)(
+        a, v, d, tm=tm_, tn=tn_, interpret=_interpret()
+    ), lambda: ref.degree_normalized_matmat_ref(a, v, d))
 
 
 def streaming_matmat(x, v, d=None, xc=None, *, kind="cosine_shifted",
@@ -233,20 +298,25 @@ def streaming_matmat(x, v, d=None, xc=None, *, kind="cosine_shifted",
     """
     kind, sigma = _spec_kind_sigma(spec, kind, sigma)
     mode = _resolve_mode(mode, force_reference, default="streaming")
-    if mode == "reference":
+
+    def _ref():
         return ref.affinity_matmat_ref(x, v, d, xc, kind=kind, sigma=sigma,
                                        row_offset=row_offset,
                                        col_offset=col_offset,
                                        scale_r=scale_r, scale_c=scale_c,
                                        thr=thr)
+
+    if mode == "reference":
+        return _ref()
     n = max(x.shape[0], x.shape[0] if xc is None else xc.shape[0])
-    tm, tn = _tiles(n, tm, tn, r=v.shape[1], m=x.shape[1])
-    return dispatch("streaming_matmat", mode)(
-        x, v, d, xc, kind=kind, sigma=sigma, tm=tm, tn=tn,
+    tm_, tn_ = _tiles(n, tm, tn, r=v.shape[1], m=x.shape[1])
+    return _guarded("streaming_matmat", lambda: dispatch(
+        "streaming_matmat", mode)(
+        x, v, d, xc, kind=kind, sigma=sigma, tm=tm_, tn=tn_,
         row_offset=row_offset, col_offset=col_offset,
         scale_r=scale_r, scale_c=scale_c, thr=thr,
         interpret=_interpret(),
-    )
+    ), _ref)
 
 
 def streaming_degree(x, xc=None, *, kind="cosine_shifted", sigma=1.0,
@@ -261,19 +331,24 @@ def streaming_degree(x, xc=None, *, kind="cosine_shifted", sigma=1.0,
     """
     kind, sigma = _spec_kind_sigma(spec, kind, sigma)
     mode = _resolve_mode(mode, force_reference, default="streaming")
-    if mode == "reference":
+
+    def _ref():
         return ref.affinity_degree_streaming_ref(
             x, xc, kind=kind, sigma=sigma,
             row_offset=row_offset, col_offset=col_offset,
             scale_r=scale_r, scale_c=scale_c, thr=thr)
+
+    if mode == "reference":
+        return _ref()
     n = max(x.shape[0], x.shape[0] if xc is None else xc.shape[0])
-    tm, tn = _tiles(n, tm, tn, m=x.shape[1])
-    return dispatch("streaming_degree", mode)(
-        x, xc, kind=kind, sigma=sigma, tm=tm, tn=tn,
+    tm_, tn_ = _tiles(n, tm, tn, m=x.shape[1])
+    return _guarded("streaming_degree", lambda: dispatch(
+        "streaming_degree", mode)(
+        x, xc, kind=kind, sigma=sigma, tm=tm_, tn=tn_,
         row_offset=row_offset, col_offset=col_offset,
         scale_r=scale_r, scale_c=scale_c, thr=thr,
         interpret=_interpret()
-    )
+    ), _ref)
 
 
 def row_topk(x, xc=None, *, k, stat="similarity", kind="cosine_shifted",
@@ -289,18 +364,22 @@ def row_topk(x, xc=None, *, k, stat="similarity", kind="cosine_shifted",
     """
     kind, sigma = _spec_kind_sigma(spec, kind, sigma)
     mode = _resolve_mode(mode, force_reference)
-    if mode == "reference":
+
+    def _ref():
         return ref.row_topk_ref(x, xc, k=k, stat=stat, kind=kind, sigma=sigma,
                                 scale_r=scale_r, scale_c=scale_c,
                                 row_offset=row_offset, col_offset=col_offset)
+
+    if mode == "reference":
+        return _ref()
     n = max(x.shape[0], x.shape[0] if xc is None else xc.shape[0])
-    tm, tn = _tiles(n, tm, tn, m=x.shape[1])
-    return dispatch("row_topk", mode)(
-        x, xc, k=k, stat=stat, kind=kind, sigma=sigma, tm=tm, tn=tn,
+    tm_, tn_ = _tiles(n, tm, tn, m=x.shape[1])
+    return _guarded("row_topk", lambda: dispatch("row_topk", mode)(
+        x, xc, k=k, stat=stat, kind=kind, sigma=sigma, tm=tm_, tn=tn_,
         row_offset=row_offset, col_offset=col_offset,
         scale_r=scale_r, scale_c=scale_c,
         interpret=_interpret(),
-    )
+    ), _ref)
 
 
 def power_step(a, v, d, *, tm=None, tn=None, force_reference=False,
@@ -310,10 +389,10 @@ def power_step(a, v, d, *, tm=None, tn=None, force_reference=False,
     if mode == "reference":
         return ref.power_step_ref(a, v, d)
     r = 1 if v.ndim == 1 else v.shape[1]
-    tm, tn = _tiles(a.shape[0], tm, tn, r=r, a_bytes=a.dtype.itemsize)
-    return dispatch("power_step", mode)(
-        a, v, d, tm=tm, tn=tn, interpret=_interpret()
-    )
+    tm_, tn_ = _tiles(a.shape[0], tm, tn, r=r, a_bytes=a.dtype.itemsize)
+    return _guarded("power_step", lambda: dispatch("power_step", mode)(
+        a, v, d, tm=tm_, tn=tn_, interpret=_interpret()
+    ), lambda: ref.power_step_ref(a, v, d))
 
 
 def gram(v, *, tm=512, force_reference=False, mode=None):
@@ -324,7 +403,8 @@ def gram(v, *, tm=512, force_reference=False, mode=None):
     mode = _resolve_mode(mode, force_reference)
     if mode == "reference":
         return ref.gram_ref(v)
-    return dispatch("gram", mode)(v, tm=tm, interpret=_interpret())
+    return _guarded("gram", lambda: dispatch("gram", mode)(
+        v, tm=tm, interpret=_interpret()), lambda: ref.gram_ref(v))
 
 
 def kmeans_assign(x, cents, *, tm=512, force_reference=False, mode=None):
@@ -332,9 +412,9 @@ def kmeans_assign(x, cents, *, tm=512, force_reference=False, mode=None):
     mode = _resolve_mode(mode, force_reference)
     if mode == "reference":
         return ref.kmeans_assign_ref(x, cents)
-    return dispatch("kmeans_assign", mode)(
+    return _guarded("kmeans_assign", lambda: dispatch("kmeans_assign", mode)(
         x, cents, tm=tm, interpret=_interpret()
-    )
+    ), lambda: ref.kmeans_assign_ref(x, cents))
 
 
 def flash_attention(q, k, v, *, causal=True, block_q=512, block_k=512,

@@ -58,7 +58,15 @@ def _power_step_kernel(a_ref, v_ref, d_ref, u_ref, *, nj: int):
     def _acc():
         u_ref[...] += partial
 
-    # last col-step: normalize the accumulated row block by the degree
+    # last col-step: normalize the accumulated row block by the degree.
+    # The floored divide is already zero-degree safe: d = 0 means the whole
+    # A row is zero (nonnegative entries), so the accumulated u row is an
+    # exact 0 and 0/1e-30 stays exactly 0; a NaN degree propagates NaN into
+    # the iterate, which the loop's non-finite latch catches (DESIGN.md
+    # §12). The divide form itself is pinned — a masked-where variant is
+    # value-identical on healthy rows but perturbs interpret-mode XLA
+    # fusion enough to break local/sharded trajectory parity (the
+    # kernels/ops.py::_tiles discipline). Padding rows carry d = 1.0.
     @pl.when(j == nj - 1)
     def _norm():
         d = d_ref[...]                   # (TM, 1)

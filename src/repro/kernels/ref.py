@@ -103,12 +103,22 @@ def row_topk_ref(
     return jax.lax.top_k(s, k)[0]
 
 
+def _floored_degree_divide(u: jax.Array, d: jax.Array) -> jax.Array:
+    """u / d with the floored reciprocal the Pallas kernels use — already
+    zero-degree safe (d = 0 implies the whole nonnegative A row, hence u,
+    is an exact 0; NaN degrees propagate to the loop's non-finite latch).
+    The divide form is pinned: masked-where variants are value-identical
+    on healthy rows but perturb interpret-mode XLA fusion and break
+    local/sharded trajectory parity (DESIGN.md §12)."""
+    return u / jnp.maximum(d.astype(jnp.float32), 1e-30)
+
+
 def degree_normalized_matvec_ref(
     a: jax.Array, v: jax.Array, d: jax.Array
 ) -> jax.Array:
     """Oracle for kernels.power_step.degree_normalized_matvec."""
     u = a.astype(jnp.float32) @ v.astype(jnp.float32)
-    return u / jnp.maximum(d.astype(jnp.float32), 1e-30)
+    return _floored_degree_divide(u, d)
 
 
 def degree_normalized_matmat_ref(
@@ -116,7 +126,7 @@ def degree_normalized_matmat_ref(
 ) -> jax.Array:
     """Oracle for kernels.power_step.degree_normalized_matmat (v is (n, r))."""
     u = a.astype(jnp.float32) @ v.astype(jnp.float32)
-    return u / jnp.maximum(d.astype(jnp.float32), 1e-30)[:, None]
+    return _floored_degree_divide(u, d[:, None])
 
 
 def affinity_matmat_ref(
@@ -141,7 +151,7 @@ def affinity_matmat_ref(
     u = a @ v.astype(jnp.float32)
     if d is None:
         return u
-    return u / jnp.maximum(d.astype(jnp.float32), 1e-30)[:, None]
+    return _floored_degree_divide(u, d[:, None])
 
 
 def affinity_degree_streaming_ref(

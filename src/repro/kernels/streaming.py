@@ -122,6 +122,14 @@ def _streaming_kernel(
     if normalize:
         @pl.when(j == nj - 1)
         def _norm():
+            # floored divide, zero-degree safe as-is: d = 0 implies the
+            # whole (nonnegative) A row is zero, so the accumulated u row
+            # is an exact 0 and stays 0; NaN degrees propagate to the
+            # loop's non-finite latch (DESIGN.md §12). The divide form is
+            # pinned — masked-where variants perturb interpret-mode XLA
+            # fusion and break local/sharded trajectory parity (the
+            # kernels/ops.py::_tiles discipline). Padding rows carry
+            # d = 1.0.
             d = d_ref[...]                 # (TM, 1)
             u_ref[...] = u_ref[...] / jnp.maximum(d, 1e-30)
 

@@ -10,6 +10,11 @@ Components:
   - ``StragglerMonitor``: online per-step timing stats; flags steps slower
     than ``threshold`` × running median (the multi-pod driver would use this
     to trigger hot-spare swaps / re-slicing; here it feeds metrics + logs).
+  - ``inject_nan_features`` / ``ClusteringFaultHarness``: the clustering-
+    side fault matrix (DESIGN.md §12) — corrupt inputs per trial through
+    the same injector/monitor primitives and record whether each ``run_gpic``
+    call succeeded clean, degraded with a populated health report, or
+    raised a typed GPICError. Drives tests/test_robustness.py.
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 import jax
+import jax.numpy as jnp
 
 from . import checkpoint as ckpt
 
@@ -59,6 +65,83 @@ class StragglerMonitor:
     @property
     def median(self) -> float:
         return sorted(self.times)[len(self.times) // 2] if self.times else 0.0
+
+
+def inject_nan_features(x, rows, *, value: float = float("nan")):
+    """Corrupt the given feature rows with ``value`` (NaN by default) —
+    the non-finite-input fault class of the clustering fault matrix."""
+    x = jnp.asarray(x)
+    rows = jnp.asarray(rows, jnp.int32)
+    return x.at[rows].set(jnp.asarray(value, x.dtype))
+
+
+class ClusteringFaultHarness:
+    """Run GPIC trials under injected faults and record what came back.
+
+    Promotes the training-side primitives into the clustering path: a
+    :class:`FailureInjector` decides which trials corrupt their input
+    (reusing its fire-once step accounting), a :class:`StragglerMonitor`
+    times every trial, and each outcome is classified by the robustness
+    contract (DESIGN.md §12):
+
+      'ok'          — clean result, no health notes, all columns COL_OK
+      'degraded'    — result returned with damage described in
+                      ``result.health`` (isolated rows, dead/stalled
+                      columns, sanitization or kernel-fallback notes)
+      'typed_error' — a GPICError subclass was raised (the contract's
+                      failure half; anything else propagates — a harness
+                      crash IS a robustness bug)
+
+    ``corrupt_fn(x, trial) -> x`` applies the fault (e.g.
+    :func:`inject_nan_features`) on trials where the injector fires.
+    """
+
+    def __init__(self, *, fail_at_trials=(), corrupt_fn: Callable = None,
+                 straggler_threshold: float = 2.0):
+        self.injector = FailureInjector(fail_at_steps=fail_at_trials)
+        self.corrupt_fn = corrupt_fn or (
+            lambda x, trial: inject_nan_features(x, [trial % x.shape[0]]))
+        self.monitor = StragglerMonitor(threshold=straggler_threshold)
+        self.outcomes: list = []
+
+    def run_trial(self, trial: int, x, k: int, config=None, **kwargs):
+        """One clustering attempt; returns the outcome record (also kept
+        in ``self.outcomes``)."""
+        from ..core import GPICError, run_gpic
+        from ..core.health import COL_OK
+
+        try:
+            self.injector.maybe_fail(trial)
+        except SimulatedFailure:
+            x = self.corrupt_fn(x, trial)
+        t0 = time.perf_counter()
+        record: dict = {"trial": trial,
+                        "injected": trial in self.injector.fired}
+        try:
+            res = run_gpic(x, k, config, **kwargs)
+        except GPICError as e:
+            record.update(status="typed_error", error=type(e).__name__,
+                          message=str(e))
+        else:
+            h = res.health
+            clean = h is None or (
+                not h.notes
+                and int(h.isolated_rows) == 0
+                and bool((jax.device_get(h.col_status) == COL_OK).all()))
+            record.update(status="ok" if clean else "degraded",
+                          labels=jax.device_get(res.labels),
+                          health=None if h is None else h.summary())
+        record["sec"] = time.perf_counter() - t0
+        self.monitor.record(trial, record["sec"])
+        self.outcomes.append(record)
+        return record
+
+    def summary(self) -> dict:
+        counts: dict = {}
+        for r in self.outcomes:
+            counts[r["status"]] = counts.get(r["status"], 0) + 1
+        return {"trials": len(self.outcomes), "counts": counts,
+                "stragglers": len(self.monitor.flagged)}
 
 
 class RestartableLoop:

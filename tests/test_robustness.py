@@ -1,0 +1,566 @@
+"""The fault-injection suite behind the PR-6 robustness contract.
+
+Every GPIC entry point either succeeds with a diagnosable result
+(``PICResult.health`` populated) or fails with a typed ``GPICError``
+subclass — never silent garbage (DESIGN.md §12). One test class per fault
+class of the matrix:
+
+  non-finite features    front door: NonFiniteInputError / sanitize note
+  degenerate shapes      front door: InvalidInputError (n < k, empty,
+                         constant rows)
+  zero-degree rows       exact-zero sweep output (a zero-degree row's u
+                         row is already exactly 0 under the floored
+                         divide), isolated_rows count off the degree
+                         vector, DegenerateGraphError when every row is
+                         isolated
+  disconnected graphs    on-device component probe on truncated specs
+  dead/stalled columns   COL_* latches in the one convergence loop
+  kernel failures        per-op reference fallback + health note
+  corrupted ring stage   sharded streaming fault hook (mesh subprocess)
+
+The mesh tests run in a subprocess with 8 host devices (same harness as
+test_pipeline_parity) and assert local and sharded runs report identical
+health diagnostics.
+"""
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import run_in_mesh_subprocess
+from repro.core import (
+    AffinitySpec,
+    COL_MAXITER,
+    COL_NONFINITE,
+    COL_OK,
+    COL_STALLED,
+    COL_ZERO,
+    DegenerateGraphError,
+    GPICConfig,
+    GPICError,
+    HealthReport,
+    InvalidInputError,
+    NonFiniteInputError,
+    PowerDivergenceError,
+    as_operator,
+    batched_power_iteration,
+    count_bad_rows,
+    degree_guard,
+    describe_status,
+    kmeans,
+    run_gpic,
+    subspace_residual,
+)
+from repro.core.health import raise_for_health
+from repro.data.synthetic import gaussians
+from repro.kernels import ops
+from repro.train.fault_tolerance import (
+    ClusteringFaultHarness,
+    inject_nan_features,
+)
+
+
+def _blobs(n=64, k=3, seed=0):
+    return gaussians(n, k=k, seed=seed)[0]
+
+
+# ---------------------------------------------------------------------------
+# Front-door validation (typed errors before any device work)
+# ---------------------------------------------------------------------------
+
+
+class TestFrontDoor:
+    def test_nan_features_raise_typed(self):
+        x = inject_nan_features(_blobs(), [3, 7])
+        with pytest.raises(NonFiniteInputError, match="non-finite"):
+            run_gpic(x, 3)
+
+    def test_nonfinite_error_is_invalid_input_and_value_error(self):
+        # the hierarchy contract: callers may catch the base classes
+        assert issubclass(NonFiniteInputError, InvalidInputError)
+        assert issubclass(InvalidInputError, ValueError)
+        assert issubclass(InvalidInputError, GPICError)
+        assert issubclass(DegenerateGraphError, GPICError)
+        assert issubclass(PowerDivergenceError, GPICError)
+
+    def test_sanitize_recovers_and_records(self):
+        x = inject_nan_features(_blobs(), [3, 7])
+        res = run_gpic(x, 3, GPICConfig(sanitize=True))
+        assert any(n.startswith("sanitized:") for n in res.health.notes)
+        labels = np.asarray(res.labels)
+        assert np.isfinite(np.asarray(res.embedding)).all()
+        assert len(np.unique(labels)) == 3
+
+    def test_inf_features_raise_typed(self):
+        x = inject_nan_features(_blobs(), [0], value=float("inf"))
+        with pytest.raises(NonFiniteInputError):
+            run_gpic(x, 3)
+
+    def test_n_less_than_k(self):
+        with pytest.raises(InvalidInputError, match="k=8"):
+            run_gpic(_blobs()[:5], 8)
+
+    def test_empty_matrix(self):
+        with pytest.raises(InvalidInputError, match="empty"):
+            run_gpic(np.zeros((0, 4), np.float32), 2)
+
+    def test_bad_ndim(self):
+        with pytest.raises(InvalidInputError, match="matrix"):
+            run_gpic(np.zeros((16,), np.float32), 2)
+
+    def test_constant_rows(self):
+        x = np.ones((32, 4), np.float32)
+        with pytest.raises(InvalidInputError, match="identical"):
+            run_gpic(x, 2)
+
+
+# ---------------------------------------------------------------------------
+# Zero-degree rows / degenerate graphs
+# ---------------------------------------------------------------------------
+
+
+class TestZeroDegree:
+    def test_degree_guard_masks_isolated_rows(self):
+        u = jnp.asarray(np.random.RandomState(0).randn(6, 2), jnp.float32)
+        d = jnp.asarray([1.0, 0.0, 2.5, jnp.nan, 1e-25, jnp.inf])
+        out = degree_guard(u, d)
+        # healthy rows divide bitwise as the old 1e-30-floor guard did
+        assert bool(jnp.all(out[0] == u[0] / 1.0))
+        assert bool(jnp.all(out[2] == u[2] / 2.5))
+        assert bool(jnp.all(out[4] == u[4] / 1e-25))
+        # zero and NaN degrees mask to exact zero (NaN > 0 is False)
+        assert bool(jnp.all(out[1] == 0.0))
+        assert bool(jnp.all(out[3] == 0.0))
+        # inf degree is "> 0": divides to 0 the normal way
+        assert np.isfinite(np.asarray(out)).all()
+        # 1-D u works too
+        assert bool(jnp.all(degree_guard(u[:, 0], d)[1] == 0.0))
+
+    def test_count_bad_rows(self):
+        d = jnp.asarray([1.0, 0.0, jnp.nan, 3.0])
+        assert int(count_bad_rows(d)) == 2
+        assert int(count_bad_rows(jnp.ones(5))) == 0
+
+    def test_rbf_underflow_outlier_is_isolated_not_nan(self):
+        # the outlier's similarities all underflow to exact 0 under a small
+        # sigma -> a zero-degree row; its sweep output is already exactly
+        # zero (all-zero A row => u row 0) and the health report counts
+        # it — no NaN anywhere
+        rs = np.random.RandomState(1)
+        x = np.concatenate([rs.randn(40, 2).astype(np.float32) * 0.2,
+                            np.full((1, 2), 60.0, np.float32)])
+        res = run_gpic(x, 2, GPICConfig(affinity_kind="rbf", sigma=0.5))
+        assert int(res.health.isolated_rows) == 1
+        assert np.isfinite(np.asarray(res.embeddings)).all()
+        assert np.isfinite(np.asarray(res.embedding)).all()
+
+    def test_all_rows_isolated_raises_degenerate(self):
+        rs = np.random.RandomState(2)
+        x = (rs.randn(24, 3) * 1e4).astype(np.float32)
+        with pytest.raises(DegenerateGraphError, match="isolated"):
+            run_gpic(x, 3, GPICConfig(affinity_kind="rbf", sigma=1e-3))
+
+    def test_huge_finite_features_raise_typed(self):
+        # 1e38 is finite so the front door admits it, but the rbf distances
+        # overflow: every degree goes non-finite -> counted isolated ->
+        # typed error, not NaN labels
+        rs = np.random.RandomState(3)
+        x = (np.sign(rs.randn(32, 4)) * 1e38).astype(np.float32)
+        with pytest.raises(GPICError):
+            run_gpic(x, 3, GPICConfig(affinity_kind="rbf", sigma=1.0))
+
+
+# ---------------------------------------------------------------------------
+# Disconnected components (truncated kNN graphs)
+# ---------------------------------------------------------------------------
+
+
+class TestComponentProbe:
+    def test_two_blobs_knn_reports_two_components(self):
+        rs = np.random.RandomState(0)
+        x = np.concatenate([
+            rs.randn(32, 2).astype(np.float32) * 0.1,
+            rs.randn(32, 2).astype(np.float32) * 0.1 + 50.0,
+        ])
+        spec = AffinitySpec(kind="rbf", sigma=0.5, knn_k=8)
+        res = run_gpic(x, 2, GPICConfig(affinity=spec))
+        assert int(res.health.n_components) == 2
+        comp = np.asarray(res.health.components)
+        # ids are by discovery order: rows 0..31 -> 0, rows 32.. -> 1
+        assert (comp[:32] == 0).all() and (comp[32:] == 1).all()
+
+    def test_connected_graph_reports_one(self):
+        rs = np.random.RandomState(0)
+        x = rs.randn(64, 2).astype(np.float32) * 0.5   # one dense cloud
+        spec = AffinitySpec(kind="rbf", sigma=1.0, knn_k=16)
+        res = run_gpic(x, 3, GPICConfig(affinity=spec))
+        assert int(res.health.n_components) == 1
+
+    def test_probe_components_agree_with_clustering(self):
+        # three well-separated blobs under kNN truncation disconnect into
+        # exactly their blobs: the probe's component ids ARE the labels
+        x = _blobs(64, k=3)
+        spec = AffinitySpec(kind="rbf", sigma=1.0, knn_k=16)
+        res = run_gpic(x, 3, GPICConfig(affinity=spec))
+        assert int(res.health.n_components) == 3
+        assert (np.asarray(res.health.components)
+                == np.asarray(res.labels)).all()
+
+    def test_dense_spec_skips_probe(self):
+        res = run_gpic(_blobs(), 3)
+        assert int(res.health.n_components) == -1
+        assert (np.asarray(res.health.components) == -1).all()
+
+    def test_component_probe_opt_out(self):
+        spec = AffinitySpec(kind="rbf", sigma=1.0, knn_k=16)
+        res = run_gpic(_blobs(64, k=3), 3,
+                       GPICConfig(affinity=spec, component_probe=False))
+        assert int(res.health.n_components) == -1
+
+
+# ---------------------------------------------------------------------------
+# Divergence latches in the one convergence loop
+# ---------------------------------------------------------------------------
+
+
+class TestColumnLatches:
+    def test_zero_v0_column_latches_col_zero(self):
+        # an all-zero start column was previously a hidden 0/0: frozen by
+        # the 1e-30 floor and reported as a normal converged column
+        op = lambda v: v * 0.5
+        v0 = jnp.stack([jnp.ones(8), jnp.zeros(8)], axis=1)
+        v, t_cols, done, status = batched_power_iteration(
+            op, v0, 1e-9, 30, return_status=True)
+        assert int(status[1]) & COL_ZERO
+        assert bool(done[1])
+        assert bool(jnp.all(v[:, 1] == 0.0))
+        assert int(status[0]) == COL_OK
+
+    def test_nonfinite_column_latched_and_quarantined(self):
+        # a sweep that injects NaN into column 0 only: the column is zeroed
+        # and latched; the healthy column converges normally
+        def op(v):
+            u = v * 0.5
+            return u.at[0, 0].set(jnp.nan)
+        v0 = jnp.ones((8, 2))
+        v, t_cols, done, status = batched_power_iteration(
+            op, v0, 1e-9, 30, return_status=True)
+        assert int(status[0]) & COL_NONFINITE
+        assert bool(jnp.all(v[:, 0] == 0.0))
+        assert np.isfinite(np.asarray(v)).all()
+        assert int(status[1]) == COL_OK
+
+    def test_periodic_trajectory_flags_stall(self):
+        # a 120-degree rotation repeats its deltas with period 3, so the
+        # acceleration statistic is a positive constant: never converges,
+        # never improves -> COL_STALLED + COL_MAXITER
+        c, s = np.cos(2 * np.pi / 3), np.sin(2 * np.pi / 3)
+        rot = jnp.asarray(np.array([[c, -s], [s, c]], np.float32))
+        v0 = jnp.asarray(np.array([[1.0], [0.0]], np.float32))
+        _v, _t, done, status = batched_power_iteration(
+            lambda v: rot @ v, v0, 1e-7, 40, return_status=True)
+        assert not bool(done[0])
+        assert int(status[0]) == (COL_STALLED | COL_MAXITER)
+
+    def test_converging_run_never_stalls(self):
+        op = lambda v: v * jnp.asarray([0.9, 0.5])[None, :]
+        v0 = jnp.ones((8, 2))
+        _v, _t, done, status = batched_power_iteration(
+            op, v0, 1e-9, 200, return_status=True)
+        assert bool(jnp.all(done))
+        assert (np.asarray(status) == COL_OK).all()
+
+    def test_describe_status(self):
+        assert describe_status(COL_OK) == ("ok",)
+        assert describe_status(COL_STALLED | COL_MAXITER) == (
+            "maxiter", "stalled")
+        assert describe_status(COL_ZERO) == ("zero",)
+
+    def test_collect_health_false_is_bitwise_neutral(self):
+        # the latches are pure observers: compiling them out changes nothing
+        op = lambda v: v * jnp.asarray([0.9, 0.7])[None, :]
+        v0 = jnp.ones((16, 2)) / 16.0
+        va, ta, da = batched_power_iteration(op, v0, 1e-9, 60,
+                                             collect_health=True)
+        vb, tb, db = batched_power_iteration(op, v0, 1e-9, 60,
+                                             collect_health=False)
+        assert bool(jnp.all(va == vb))
+        assert bool(jnp.all(ta == tb)) and bool(jnp.all(da == db))
+
+    def test_subspace_residual_zero_block_reports_inf(self):
+        # a dead (all-zero) sweep output is 0/0 — previously a false
+        # "converged" 0.0; the guard reports inf so the residual rule can
+        # never stop on a dead block
+        v = jnp.ones((8, 2))
+        u = jnp.zeros((8, 2))
+        assert bool(jnp.isinf(subspace_residual(as_operator(lambda x: x),
+                                                v, u)))
+
+    def test_raise_for_health_all_columns_dead(self):
+        h = HealthReport(
+            col_status=jnp.asarray([COL_ZERO, COL_NONFINITE], jnp.int32),
+            isolated_rows=jnp.int32(1),
+            n_components=jnp.int32(-1),
+            components=jnp.full((8,), -1, jnp.int32))
+        with pytest.raises(PowerDivergenceError, match="dead"):
+            raise_for_health(h, 8)
+        # partial damage returns normally
+        h_ok = HealthReport(
+            col_status=jnp.asarray([COL_OK, COL_ZERO], jnp.int32),
+            isolated_rows=jnp.int32(1),
+            n_components=jnp.int32(-1),
+            components=jnp.full((8,), -1, jnp.int32))
+        raise_for_health(h_ok, 8)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-failure graceful degradation
+# ---------------------------------------------------------------------------
+
+
+class TestKernelFallback:
+    def _clean(self):
+        ops.reset_kernel_fallbacks()
+        jax.clear_caches()
+
+    def test_forced_failure_falls_back_and_reports(self):
+        self._clean()
+        try:
+            with ops.forced_kernel_failure("gram"):
+                res = run_gpic(_blobs(), 3,
+                               GPICConfig(embedding="orthogonal",
+                                          n_vectors=2))
+            assert "kernel_fallback:gram" in res.health.notes
+            assert "gram" in ops.kernel_fallbacks()
+            assert len(np.unique(np.asarray(res.labels))) == 3
+        finally:
+            self._clean()
+
+    def test_fallback_is_sticky_then_resettable(self):
+        self._clean()
+        try:
+            with ops.forced_kernel_failure("power_step"):
+                ops.power_step(jnp.eye(8), jnp.ones(8), jnp.ones(8))
+            assert "power_step" in ops.kernel_fallbacks()
+            # sticky: serves the oracle without re-raising after the cm exits
+            ops.power_step(jnp.eye(8), jnp.ones(8), jnp.ones(8))
+            assert list(ops.kernel_fallbacks()) == ["power_step"]
+        finally:
+            self._clean()
+        assert ops.kernel_fallbacks() == {}
+
+    def test_fallback_result_matches_oracle(self):
+        self._clean()
+        try:
+            a = jnp.asarray(np.random.RandomState(0).rand(32, 32),
+                            jnp.float32)
+            v = jnp.ones((32, 2))
+            d = jnp.sum(a, axis=1)
+            with ops.forced_kernel_failure("degree_normalized_matmat"):
+                got = ops.degree_normalized_matmat(a, v, d)
+            want = ops.degree_normalized_matmat(a, v, d,
+                                                force_reference=True)
+            assert bool(jnp.all(got == want))
+        finally:
+            self._clean()
+
+
+# ---------------------------------------------------------------------------
+# k-means empty-cluster reseed (satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestKmeansReseed:
+    def test_adversarial_init_recovers_all_k(self):
+        # three centroids inside one blob + one centroid far from every
+        # point: the far one is empty on the first assignment. The old
+        # keep-previous-centroid fix left it empty forever (k-1 distinct
+        # labels); the farthest-point reseed recovers all k blobs.
+        rs = np.random.RandomState(0)
+        centers = [np.array(c, np.float32)
+                   for c in ([0, 0], [8, 0], [0, 8], [8, 8])]
+        x = np.concatenate([
+            rs.randn(40, 2).astype(np.float32) * 0.05 + c for c in centers])
+        init = jnp.asarray(
+            np.array([[0, 0], [0.01, 0], [0, 0.01], [100, 100]], np.float32))
+        labels, cents = kmeans(jax.random.key(0), jnp.asarray(x), 4,
+                               iters=25, init=init)
+        labels = np.asarray(labels)
+        assert len(np.unique(labels)) == 4
+        assert (np.bincount(labels) == 40).all()
+        assert np.isfinite(np.asarray(cents)).all()
+
+    def test_reseed_deterministic(self):
+        rs = np.random.RandomState(1)
+        x = jnp.asarray(rs.randn(64, 2).astype(np.float32))
+        init = jnp.asarray(
+            np.array([[0, 0], [50, 50], [60, 60]], np.float32))
+        a, _ = kmeans(jax.random.key(0), x, 3, iters=10, init=init)
+        b, _ = kmeans(jax.random.key(0), x, 3, iters=10, init=init)
+        assert bool(jnp.all(a == b))
+
+    def test_clean_path_unchanged(self):
+        # with no empty clusters the reseed predicate is all-False: the
+        # default kmeans++ path must be bitwise the historical one
+        x = jnp.asarray(_blobs(64, k=3))
+        labels, _ = kmeans(jax.random.key(0), x, 3)
+        assert len(np.unique(np.asarray(labels))) == 3
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection harness (train/fault_tolerance promoted to clustering)
+# ---------------------------------------------------------------------------
+
+
+class TestClusteringFaultHarness:
+    def test_inject_nan_features(self):
+        x = np.zeros((8, 3), np.float32)
+        bad = inject_nan_features(x, [1, 4])
+        assert bool(jnp.all(~jnp.isfinite(bad[1])))
+        assert bool(jnp.all(~jnp.isfinite(bad[4])))
+        assert bool(jnp.all(jnp.isfinite(bad[0])))
+
+    def test_matrix_of_outcomes(self):
+        x = _blobs(64, k=3)
+        h = ClusteringFaultHarness(fail_at_trials=(1, 3))
+        for trial in range(4):
+            h.run_trial(trial, x, 3)
+        statuses = [r["status"] for r in h.outcomes]
+        # clean trials succeed clean; corrupted trials (NaN row) raise the
+        # typed front-door error — nothing escapes as a crash or NaN labels
+        assert statuses[0] == "ok" and statuses[2] == "ok"
+        assert statuses[1] == "typed_error" and statuses[3] == "typed_error"
+        assert h.outcomes[1]["error"] == "NonFiniteInputError"
+        s = h.summary()
+        assert s["trials"] == 4 and s["counts"]["typed_error"] == 2
+
+    def test_degraded_outcome_with_sanitize(self):
+        x = _blobs(64, k=3)
+        h = ClusteringFaultHarness(fail_at_trials=(0,))
+        rec = h.run_trial(0, x, 3, GPICConfig(sanitize=True))
+        assert rec["status"] == "degraded"
+        assert rec["health"]["notes"]
+        assert np.isfinite(rec["labels"]).all()
+
+    def test_ok_records_labels(self):
+        rec = ClusteringFaultHarness().run_trial(0, _blobs(), 3)
+        assert rec["status"] == "ok"
+        assert len(np.unique(rec["labels"])) == 3
+
+
+# ---------------------------------------------------------------------------
+# Sharded: health parity + corrupted ring stage (8-device mesh subprocess)
+# ---------------------------------------------------------------------------
+
+_MESH_PRELUDE = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import AffinitySpec, GPICConfig, run_gpic
+    from repro.core.distributed import distributed_gpic, shard_points
+    from repro.core.health import raise_for_health, PowerDivergenceError
+    from repro.data.synthetic import gaussians
+
+    mesh = jax.make_mesh((8,), ("data",))
+    """
+
+
+def _mesh(body: str) -> str:
+    return run_in_mesh_subprocess(
+        textwrap.dedent(_MESH_PRELUDE) + textwrap.dedent(body))
+
+
+@pytest.mark.slow
+def test_sharded_health_parity():
+    """Local and 8-device sharded runs of the same problem report IDENTICAL
+    health diagnostics (col_status, isolated_rows, n_components, and the
+    per-row component ids) — the probe's positivity pattern is reduction-
+    order independent, so this parity is bitwise, for every engine."""
+    out = _mesh("""
+    rs = np.random.RandomState(0)
+    x = np.concatenate([rs.randn(128, 2).astype(np.float32) * 0.1,
+                        rs.randn(128, 2).astype(np.float32) * 0.1 + 50.0])
+    xs = shard_points(x, mesh, "data")
+    spec = AffinitySpec(kind="rbf", sigma=0.5, knn_k=8)
+    for engine in ("explicit", "streaming"):
+        cfg = GPICConfig(engine=engine, affinity=spec, n_vectors=2)
+        key = jax.random.key(1)
+        sd = run_gpic(jnp.asarray(x), 2, cfg, key=key)
+        ds = run_gpic(xs, 2, cfg.with_(mesh=mesh), key=key)
+        assert (np.asarray(sd.health.col_status)
+                == np.asarray(ds.health.col_status)).all(), engine
+        assert int(sd.health.isolated_rows) == int(ds.health.isolated_rows)
+        assert int(sd.health.n_components) == int(ds.health.n_components) == 2
+        assert (np.asarray(sd.health.components)
+                == np.asarray(ds.health.components)).all(), engine
+        print("OK", engine)
+    # matrix-free (dense cosine): health parity with the probe unarmed
+    x3 = gaussians(256, k=2, seed=0)[0]
+    cfg = GPICConfig(engine="matrix_free", n_vectors=2)
+    key = jax.random.key(1)
+    sd = run_gpic(jnp.asarray(x3), 2, cfg, key=key)
+    ds = run_gpic(shard_points(x3, mesh, "data"), 2, cfg.with_(mesh=mesh),
+                  key=key)
+    assert (np.asarray(sd.health.col_status)
+            == np.asarray(ds.health.col_status)).all()
+    assert int(sd.health.isolated_rows) == int(ds.health.isolated_rows) == 0
+    assert int(sd.health.n_components) == int(ds.health.n_components) == -1
+    print("OK matrix_free")
+    """)
+    assert out.count("OK") == 3
+
+
+@pytest.mark.slow
+def test_corrupted_ring_stage_is_latched():
+    """A NaN-poisoned ring stage in the sharded streaming engine is caught
+    by the non-finite column latch: the embedding comes back zeroed (not
+    NaN), the health report says COL_NONFINITE, and promoting the report
+    through raise_for_health yields the typed divergence error."""
+    out = _mesh("""
+    from repro.core.health import COL_NONFINITE
+    x, _ = gaussians(256, k=3, seed=0)
+    xs = shard_points(x, mesh, "data")
+    res = distributed_gpic(xs, 3, key=jax.random.key(0), mesh=mesh,
+                           engine="streaming", affinity_kind="rbf",
+                           sigma=0.3, inject_ring_fault=("ring_nan", 2))
+    status = np.asarray(res.health.col_status)
+    assert (status & COL_NONFINITE).all(), status
+    assert np.isfinite(np.asarray(res.embedding)).all()
+    assert np.isfinite(np.asarray(res.embeddings)).all()
+    try:
+        raise_for_health(res.health, x.shape[0])
+        raise AssertionError("expected PowerDivergenceError")
+    except PowerDivergenceError:
+        pass
+    print("OK ring fault latched")
+    # the hook validates its own arguments
+    try:
+        distributed_gpic(xs, 3, key=jax.random.key(0), mesh=mesh,
+                         engine="explicit", affinity_kind="rbf", sigma=0.3,
+                         inject_ring_fault=("ring_nan", 0))
+        raise AssertionError("expected ValueError")
+    except ValueError:
+        print("OK non-ring engine rejected")
+    """)
+    assert out.count("OK") == 2
+
+
+@pytest.mark.slow
+def test_sharded_isolated_rows_and_clean_parity():
+    """An underflow-isolated outlier row is counted identically by local
+    and sharded engines, and the clean-input sharded labels stay intact."""
+    out = _mesh("""
+    rs = np.random.RandomState(1)
+    x = np.concatenate([rs.randn(255, 2).astype(np.float32) * 0.2,
+                        np.full((1, 2), 60.0, np.float32)])
+    xs = shard_points(x, mesh, "data")
+    cfg = GPICConfig(engine="streaming", affinity_kind="rbf", sigma=0.5)
+    key = jax.random.key(1)
+    sd = run_gpic(jnp.asarray(x), 2, cfg, key=key)
+    ds = run_gpic(xs, 2, cfg.with_(mesh=mesh), key=key)
+    assert int(sd.health.isolated_rows) == int(ds.health.isolated_rows) == 1
+    assert np.isfinite(np.asarray(ds.embedding)).all()
+    print("OK isolated parity")
+    """)
+    assert out.count("OK") == 1

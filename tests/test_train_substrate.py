@@ -137,6 +137,90 @@ class TestFaultTolerance:
         assert len(mon.flagged) == 1
 
 
+class TestFaultTolerancePrimitives:
+    """Direct unit tests of the fault-tolerance primitives on trivial
+    state, independent of the model train step (the robustness suite
+    drives the same pieces through ClusteringFaultHarness)."""
+
+    @staticmethod
+    def _loop(tmp_path, injector=None, ckpt_every=2):
+        # state is one scalar; step t adds data_fn(t) — a pure, replayable
+        # step whose exact final value is the sum of the batch sequence
+        def step_fn(state, batch):
+            s = state["s"] + batch
+            return {"s": s}, {"s": float(s)}
+
+        def data_fn(step):
+            return jnp.float32(step + 1)
+
+        return RestartableLoop(step_fn, data_fn, str(tmp_path),
+                               ckpt_every=ckpt_every, injector=injector,
+                               async_save=False)
+
+    def test_save_restore_roundtrip(self, tmp_path):
+        loop = self._loop(tmp_path)
+        state = {"s": jnp.float32(41.5)}
+        loop._save(state, 7)
+        restored, step = loop._restore({"s": jnp.float32(0.0)})
+        assert step == 7
+        np.testing.assert_array_equal(np.asarray(restored["s"]),
+                                      np.asarray(state["s"]))
+
+    def test_restore_without_checkpoint_is_none(self, tmp_path):
+        assert self._loop(tmp_path / "empty")._restore(
+            {"s": jnp.float32(0.0)}) is None
+
+    def test_restore_picks_latest_step(self, tmp_path):
+        loop = self._loop(tmp_path)
+        for step in (2, 10, 6):
+            loop._save({"s": jnp.float32(step)}, step)
+        _, step = loop._restore({"s": jnp.float32(0.0)})
+        assert step == 10
+
+    def test_crash_replay_is_exact(self, tmp_path):
+        # sum(1..8) = 36 regardless of a crash at step 5 (between saves)
+        inj = FailureInjector(fail_at_steps=[5])
+        loop = self._loop(tmp_path, injector=inj)
+        state, step, log = loop.run({"s": jnp.float32(0.0)}, 8)
+        assert step == 8 and loop.restarts == 1
+        assert float(state["s"]) == 36.0
+        # the replayed steps appear twice in the metrics log; the final
+        # values per step are the uninterrupted ones
+        assert log[-1]["s"] == 36.0
+
+    def test_injector_fires_once_per_step(self):
+        inj = FailureInjector(fail_at_steps=[3])
+        with pytest.raises(SimulatedFailure):
+            inj.maybe_fail(3)
+        inj.maybe_fail(3)   # second visit passes (fire-once accounting)
+        inj.maybe_fail(4)
+        assert inj.fired == {3}
+
+    def test_straggler_needs_warmup_samples(self):
+        # fewer than 5 samples never flags, however slow the step
+        mon = StragglerMonitor(threshold=2.0)
+        for i in range(4):
+            assert not mon.record(i, 10.0 if i == 3 else 0.1)
+        assert mon.flagged == []
+
+    def test_straggler_threshold_boundary(self):
+        mon = StragglerMonitor(threshold=2.0)
+        for i in range(8):
+            mon.record(i, 1.0)
+        assert not mon.record(8, 2.0)   # == threshold*median: not flagged
+        assert mon.record(9, 2.0001)    # just above: flagged
+        assert mon.flagged[-1][0] == 9
+
+    def test_straggler_window_eviction(self):
+        mon = StragglerMonitor(threshold=2.0, window=5)
+        for i in range(5):
+            mon.record(i, 1.0)
+        for i in range(5, 10):
+            mon.record(i, 100.0)        # first flags, then shifts the median
+        assert mon.median == 100.0
+        assert not mon.record(10, 150.0)  # 1.5x new median: healthy again
+
+
 class TestCompression:
     def test_quantize_roundtrip_error_bounded(self):
         x = jax.random.normal(jax.random.key(0), (64, 128))
