@@ -15,6 +15,14 @@ Sections (all at r ∈ {1, 4} where a sweep is involved):
   affinity/moons/<spec>          end-to-end run_gpic on two_moons(480) at
                                  sigma 0.25: ARI + sweep count — the
                                  quality acceptance (dense ~0.5, kNN 1.0)
+  affinity/sparse/*              block-CSR storage (ISSUE 8): on
+                                 cluster-sorted blobs the kNN mask kills
+                                 whole (128, 128) tiles; ``dense_storage=0``
+                                 rows time the SAME truncated graph through
+                                 the stripe-tile plan. ASSERTS the knn30
+                                 r=1 sparse sweep is >= 2x faster than the
+                                 dense-storage sweep and the fused one-pass
+                                 build lands within 2x of the dense build
   affinity/residual_stop         orthogonal mode on three_circles with and
                                  without residual_tol; ASSERTS the
                                  sweep-count reduction (the ROADMAP
@@ -35,7 +43,8 @@ from repro.core import (
     adjusted_rand_index,
     run_gpic,
 )
-from repro.core.graph import affinity_stats
+from repro.core.affinity import block_plan, dense_block_live
+from repro.core.graph import affinity_stats, fused_affinity_build
 from repro.data import three_circles, two_moons
 from repro.kernels import ops
 
@@ -75,6 +84,60 @@ def run(n=1024, moons_n=480, max_iter=400):
             rows.append(csv_row(
                 f"affinity/sweep/{tag}/r={r}", t_sweep,
                 f"nnz_frac={nnz / n:.3f} dense_storage=1"))
+
+    # --- block-CSR storage: fused one-pass build + stripe-tile sweeps ----
+    # cluster-sorted blobs so truncation produces DEAD TILES (the random
+    # cloud above keeps every tile live — it measures mask overhead, not
+    # storage); tile=128 on 8 blobs of n/8 points each
+    rng = np.random.default_rng(0)
+    n_blobs, tile_s = 8, 128
+    centers = rng.uniform(-20.0, 20.0, (n_blobs, 2))
+    xb = jnp.asarray(np.concatenate([
+        centers[i] + 0.5 * rng.standard_normal((n // n_blobs, 2))
+        for i in range(n_blobs)
+    ]), jnp.float32)
+    dense_spec = SPECS[0][1]
+    # jit the whole build on both sides: the operators always run these
+    # inside the gpic jit, and eager per-op dispatch would swamp the
+    # epilogue arithmetic being measured
+    t_dense_build, _ = time_fn(jax.jit(
+        lambda xb: _build(xb, dense_spec)), xb)
+    rows.append(csv_row("affinity/sparse/build/dense", t_dense_build,
+                        f"n={n} tile={tile_s}"))
+    for tag, spec in SPECS[1:]:
+        scale = affinity_stats(xb, spec)[0] if spec.adaptive else None
+        t_fused, (a, d, _thr) = time_fn(jax.jit(
+            lambda xb, sc, s=spec: fused_affinity_build(
+                xb, spec=s, scale_r=sc, scale_c=sc, tm=tile_s,
+                tn=tile_s)), xb, scale)
+        counts, col_idx, max_b = block_plan(dense_block_live(a, tile_s,
+                                                             tile_s))
+        live_frac = float(np.asarray(counts).sum()) / counts.shape[0] \
+            / (-(-n // tile_s))
+        rows.append(csv_row(
+            f"affinity/sparse/build/{tag}", t_fused,
+            f"one_pass=1 live_block_frac={live_frac:.3f} "
+            f"vs_dense_build_x={t_fused / t_dense_build:.2f}"))
+        for r in (1, 4):
+            v = jax.random.uniform(jax.random.key(r), (n, r))
+            t_dn, _ = time_fn(
+                lambda v=v, a=a, d=d: ops.degree_normalized_matmat(
+                    a, v, d, tm=tile_s, tn=tile_s))
+            t_bs, _ = time_fn(
+                lambda v=v, a=a, d=d: ops.block_sparse_matmat(
+                    a, v, d, counts, col_idx, max_b, tm=tile_s, tn=tile_s))
+            rows.append(csv_row(
+                f"affinity/sparse/sweep/{tag}/r={r}", t_bs,
+                f"dense_storage=0 dense_storage_us={t_dn * 1e6:.1f} "
+                f"speedup_x={t_dn / t_bs:.2f}"))
+            if tag == "knn30" and r == 1:
+                assert t_bs * 2.0 <= t_dn, (
+                    f"block-sparse sweep not >=2x faster: {t_bs * 1e6:.0f}us"
+                    f" vs dense-storage {t_dn * 1e6:.0f}us")
+        if tag == "knn30":
+            assert t_fused <= 2.0 * t_dense_build, (
+                f"fused one-pass build {t_fused * 1e6:.0f}us exceeds 2x the "
+                f"dense build {t_dense_build * 1e6:.0f}us")
 
     # --- quality: the two_moons acceptance -------------------------------
     xm, ym = two_moons(moons_n, seed=0)

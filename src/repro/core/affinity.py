@@ -365,3 +365,72 @@ def degree_matrix_free(
     """Row sums of A (degree vector) without materializing A."""
     ones = jnp.ones((xn.shape[0],), xn.dtype)
     return matvec_matrix_free(xn, ones, kind)
+
+
+# ---------------------------------------------------------------------------
+# Block-index planning for truncated specs (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def block_plan(live: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(counts, col_idx, max_b) block-CSR plan from an (nI, nJ) live map.
+
+    ``live`` is boolean/int: live[i, j] != 0 iff column-block j of row-block
+    i holds at least one surviving affinity entry. The plan is the
+    scalar-prefetch operand set of the kernels/block_sparse.py sweeps:
+
+      counts[i]        number of live column-blocks in row-block i
+      col_idx[i, :]    the live block ids in ASCENDING order first — the
+                       sweep accumulates blocks in the same order the dense
+                       grid visits them, which is what keeps the two paths
+                       bitwise-equal; the tail holds the dead ids (any
+                       valid in-range index works, skipped steps only
+                       prefetch) in ascending order too
+      max_b            max(counts) clamped to >= 1 — the traced grid extent
+
+    Everything is traced (jit-safe); only the (nI, nJ) SHAPE is static.
+
+    The stable partition is built from prefix sums (live id j lands at slot
+    cumsum(live)[j]-1, dead id j at counts + cumsum(dead)[j]-1), NOT from
+    ``argsort(~live, stable=True)``, although the two are value-identical:
+    on jax 0.4.x CPU, a sort whose output feeds the scalar-prefetch index
+    maps of an interpret-mode kernel inside ``shard_map`` miscompiles — the
+    gathered ids silently degrade to the identity, which reads dead (zero)
+    stripe tiles on every device whose live blocks are off-diagonal and
+    collapses the power iteration onto one component (DESIGN.md §13).
+    """
+    live = jnp.asarray(live) != 0
+    n_i, n_j = live.shape
+    counts = jnp.sum(live, axis=1).astype(jnp.int32)
+    csum = jnp.cumsum(live.astype(jnp.int32), axis=1)
+    ids = jnp.arange(n_j, dtype=jnp.int32)[None, :]
+    slot = jnp.where(live, csum - 1, counts[:, None] + ids - csum)
+    col_idx = (jnp.zeros((n_i, n_j), jnp.int32)
+               .at[jnp.arange(n_i)[:, None], slot]
+               .set(jnp.broadcast_to(ids, (n_i, n_j))))
+    max_b = jnp.maximum(jnp.max(counts), 1).astype(jnp.int32)
+    return counts, col_idx, max_b
+
+
+def plan_to_live(counts: jax.Array, col_idx: jax.Array) -> jax.Array:
+    """Invert a block plan back to its (nI, nJ) boolean live map — the
+    property-test oracle: scattering True through the first counts[i]
+    entries of col_idx[i] must reproduce the map the plan came from. The
+    scatter uses ``.max`` (not ``.set``) because the padded tail repeats
+    dead ids with False and must not clobber a live True."""
+    n_i, n_j = col_idx.shape
+    slot_live = jnp.arange(n_j)[None, :] < counts[:, None]
+    live = jnp.zeros((n_i, n_j), bool)
+    return live.at[jnp.arange(n_i)[:, None], col_idx].max(slot_live)
+
+
+def dense_block_live(a: jax.Array, tm: int, tn: int) -> jax.Array:
+    """(nI, nJ) live map of a STORED truncated matrix on the (tm, tn) tile
+    grid (rows/cols zero-padded up to tile multiples, so padding blocks are
+    dead). The explicit engines plan from the matrix they just built;
+    streaming engines use kernels/block_sparse.block_liveness instead."""
+    n_rows, n_cols = a.shape
+    rp = -(-n_rows // tm) * tm
+    cp = -(-n_cols // tn) * tn
+    ap = jnp.pad(a, ((0, rp - n_rows), (0, cp - n_cols)))
+    tiles = ap.reshape(rp // tm, tm, cp // tn, tn)
+    return jnp.any(tiles != 0, axis=(1, 3))

@@ -126,7 +126,8 @@ def _run_sharded(op, axes, *, key, u0t, k, eps, max_iter, kmeans_iters,
                      "affinity_kind", "sigma", "affinity", "eps_scale",
                      "a_dtype", "fold_shift", "n_vectors", "engine", "tile",
                      "use_pallas", "embedding", "qr_every", "snapshot_iters",
-                     "residual_tol", "probe_components", "inject_ring_fault"),
+                     "residual_tol", "probe_components", "block_sparse",
+                     "inject_ring_fault"),
 )
 def distributed_gpic(
     x: jax.Array,
@@ -152,6 +153,7 @@ def distributed_gpic(
     snapshot_iters: tuple | None = None,
     residual_tol: float | None = None,
     probe_components: bool = True,
+    block_sparse: bool = True,
     inject_ring_fault: tuple | None = None,
 ) -> PICResult:
     """Sharded GPIC on the Pallas kernels (paper-faithful math, row stripes).
@@ -196,11 +198,13 @@ def distributed_gpic(
         if engine == "explicit":
             op = sharded_explicit_operator(
                 x_loc, axes=axes, spec=spec, a_dtype=a_dtype,
-                fold_shift=fold_shift, tile=tile, use_pallas=use_pallas)
+                fold_shift=fold_shift, tile=tile, use_pallas=use_pallas,
+                block_sparse=block_sparse)
         elif engine == "streaming":
             op = sharded_streaming_operator(
                 x_loc, axes=axes, mesh_size=mesh_size, spec=spec,
                 tile=tile, use_pallas=use_pallas,
+                block_sparse=block_sparse,
                 inject_fault=inject_ring_fault)
         else:
             raise ValueError(f"unknown engine {engine!r} "

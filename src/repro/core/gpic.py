@@ -72,7 +72,7 @@ _truncated_power_iteration = batched_power_iteration
         "k", "max_iter", "kmeans_iters", "affinity_kind", "sigma",
         "affinity", "n_vectors", "use_pallas", "tile", "engine", "a_dtype",
         "embedding", "qr_every", "snapshot_iters", "residual_tol",
-        "probe_components",
+        "probe_components", "block_sparse",
     ),
 )
 def gpic(
@@ -96,6 +96,7 @@ def gpic(
     snapshot_iters: tuple | None = None,
     residual_tol: float | None = None,
     probe_components: bool = True,
+    block_sparse: bool = True,
 ) -> PICResult:
     """Accelerated PIC via the multi-vector power engine.
 
@@ -106,7 +107,10 @@ def gpic(
     subspace residual stopping rule (embedding='orthogonal', DESIGN.md
     §11). ``tile=None`` lets the static autotuner pick the Pallas tile
     size; ``use_pallas=False`` routes every op to the pure-jnp reference
-    implementations (same math, unfused HLO).
+    implementations (same math, unfused HLO). ``block_sparse`` routes
+    truncated (kNN) specs through the fused one-pass build and the
+    block-CSR sweeps (DESIGN.md §13); False keeps the dense-storage
+    two-pass path — bitwise-equal results either way.
     """
     n = x.shape[0]
     if eps is None:
@@ -118,10 +122,12 @@ def gpic(
 
     if engine == "explicit":
         op = explicit_operator(inp, spec=spec, a_dtype=a_dtype, tile=tile,
-                               use_pallas=use_pallas)
+                               use_pallas=use_pallas,
+                               block_sparse=block_sparse)
     elif engine == "streaming":
         op = streaming_operator(inp, spec=spec, tile=tile,
-                                use_pallas=use_pallas)
+                                use_pallas=use_pallas,
+                                block_sparse=block_sparse)
     else:
         raise ValueError(f"unknown engine {engine!r} "
                          "(expected 'explicit' or 'streaming')")

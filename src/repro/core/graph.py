@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
+from ..kernels.row_topk import topk_thresholds_from_scores
 from .affinity import SCALE_FLOOR, AffinitySpec
 
 
@@ -60,3 +61,68 @@ def affinity_stats(
             tm=tile, tn=tile, force_reference=not use_pallas)
         thr = tk[:, -1]
     return scale, thr
+
+
+def fused_affinity_build(
+    x: jax.Array,
+    xc: jax.Array | None = None,
+    *,
+    spec: AffinitySpec,
+    scale_r: jax.Array | None = None,
+    scale_c: jax.Array | None = None,
+    tm: int | None = None,
+    tn: int | None = None,
+    use_pallas: bool = True,
+    a_dtype=jnp.float32,
+    row_offset: jax.Array | int = 0,
+    col_offset: jax.Array | int = 0,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(A, D, thr) one-pass truncated build for the explicit engines
+    (DESIGN.md §13) — replaces pass 1b + the masked rebuild with ONE sweep
+    over the feature blocks plus cheap epilogues:
+
+      1. build the stripe UNMASKED at f32 (the similarity pass the old
+         row-top-k kernel re-did is the build itself)
+      2. thr from ``topk_thresholds_from_scores`` — bitwise-equal to the
+         streamed pass-1b statistic (shared tile transform + exact order
+         statistic, both value-selecting)
+      3. elementwise re-mask ``a >= thr[:, None]`` — bitwise-equal to the
+         in-tile mask of the old rebuild (same f32 values, same compare),
+         then cast to the storage dtype (same rounding the kernel applies)
+      4. degrees by replaying the build kernel's fused RowSum on the
+         masked f32 stripe: one ``jnp.sum(axis=1)`` per (·, tn) tile
+         column (the kernel's per-tile VPU row sum on the same values)
+         accumulated left-to-right in tile order (the kernel's sequential
+         ``+=`` across the grid) — bitwise-equal to the old two-pass
+         build's degrees (and to the streaming engines', the cross-engine
+         discipline) WITHOUT re-scoring the features in a second kernel
+         sweep
+
+    The old two-pass path (``affinity_stats`` + masked build) remains the
+    ``block_sparse=False`` route of the operators; this function is
+    bitwise-equal to it, asserted in tests/test_block_sparse.py.
+
+    Adaptive scales stay a caller concern (they come from the neg-sq-dist
+    pass, which has no build to fuse into). Callers resolve (tm, tn) once
+    and reuse them for the block plan and every sweep.
+    """
+    assert spec.truncated, "fused_affinity_build is the truncated-spec build"
+    a_raw, _ = ops.affinity_and_degree(
+        x, xc, spec=spec, scale_r=scale_r, scale_c=scale_c, thr=None,
+        tm=tm, tn=tn, out_dtype=jnp.float32,
+        row_offset=row_offset, col_offset=col_offset,
+        force_reference=not use_pallas,
+    )
+    thr = topk_thresholds_from_scores(
+        a_raw, k=spec.knn_k, row_offset=row_offset, col_offset=col_offset)
+    a_f32 = jnp.where(a_raw >= thr[:, None], a_raw, 0.0)
+    n_rows, n_cols = a_f32.shape
+    _, tn_r = ops.resolve_tiles(
+        n_cols, tm, tn, m=x.shape[1],
+        a_bytes=jnp.dtype(jnp.float32).itemsize)
+    cp = -(-n_cols // tn_r) * tn_r
+    ap = jnp.pad(a_f32, ((0, 0), (0, cp - n_cols)))
+    d = jnp.sum(ap[:, :tn_r], axis=1)
+    for j in range(1, cp // tn_r):
+        d = d + jnp.sum(ap[:, j * tn_r:(j + 1) * tn_r], axis=1)
+    return a_f32.astype(a_dtype), d, thr

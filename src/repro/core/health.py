@@ -179,25 +179,32 @@ def graph_component_probe(op, n_total: int, *, row_offset=0,
     """On-device component check of the (truncated) affinity graph.
 
     Repeated nonnegative reachability expansion: starting from an indicator
-    on the lowest-index unvisited row, one ``op.matmat`` sweep adds every
+    on the lowest-index unvisited row, one ``op.matmat`` sweep (unioned
+    with one ``op.matmat_t`` sweep when the operator binds it) adds every
     row with a nonzero affinity entry into the reached set; the expansion
     runs until a fixed point, that set becomes one component, and the next
     seed is the lowest unvisited row — up to ``max_components`` seeds.
 
     Exactness across engines: for a nonnegative matrix and a {0,1}
-    indicator the POSITIVITY pattern of A@v is independent of summation
-    order (a sum of nonnegative terms is positive iff any term is), so the
-    local and sharded engines (whose sweeps differ only in reduction
-    order) compute bitwise-identical probe results — unlike the iterates
-    themselves, which agree only to reduction-order noise.
+    indicator the POSITIVITY pattern of A@v (and of Aᵀ@v) is independent
+    of summation order (a sum of nonnegative terms is positive iff any
+    term is), so the local and sharded engines (whose sweeps differ only
+    in reduction order) compute bitwise-identical probe results — unlike
+    the iterates themselves, which agree only to reduction-order noise.
 
-    Caveats (diagnostic semantics, DESIGN.md §12): the kNN-truncated graph
-    is DIRECTED (per-row top-k); the expansion follows edges toward the
-    reached set, so it recovers exact components wherever each cluster's
-    subgraph is strongly connected (the practical case) and otherwise
-    reports an upper bound. Rows are visited at most ``max_sweeps`` hops
-    out; if unvisited rows remain after ``max_components`` seeds the count
-    reports ``max_components + 1`` ("at least").
+    Symmetrized reachability: the kNN-truncated graph is DIRECTED (per-row
+    top-k), and a forward sweep alone only grows along reverse edges — a
+    row nobody selects (in-degree 0) is then unreachable from its own
+    neighbors and gets misreported as a separate component even though the
+    weak cluster is intact. Operators over truncated specs therefore bind
+    ``matmat_t`` and the expansion walks A + Aᵀ reachability — the WEAKLY
+    connected components, which is the quantity that decides whether power
+    iteration mass can spread (W = D⁻¹A moves mass along either direction
+    of an undirected similarity). Without ``matmat_t`` (symmetric dense
+    specs) the forward sweep already covers both directions. Rows are
+    visited at most ``max_sweeps`` hops out; if unvisited rows remain
+    after ``max_components`` seeds the count reports
+    ``max_components + 1`` ("at least").
 
     Returns ``(n_components () int32, comp (n_local,) int32)`` with comp
     ids in discovery order and -1 for never-reached rows.
@@ -212,8 +219,11 @@ def graph_component_probe(op, n_total: int, *, row_offset=0,
 
         def body(c):
             reached, _grew, s = c
-            u = op.matmat(reached.astype(jnp.float32)[:, None])[:, 0]
+            ind = reached.astype(jnp.float32)[:, None]
+            u = op.matmat(ind)[:, 0]
             new = reached | (u > 0)
+            if op.matmat_t is not None:
+                new = new | (op.matmat_t(ind)[:, 0] > 0)
             grew = op.sum(
                 jnp.sum((new & ~reached).astype(jnp.int32))) > 0
             return new, grew, s + 1

@@ -52,10 +52,12 @@ from .affinity import (
     AffinityKind,
     AffinitySpec,
     as_affinity_spec,
+    block_plan,
+    dense_block_live,
     matmat_matrix_free,
     row_normalize_features,
 )
-from .graph import affinity_stats, scales_from_topk
+from .graph import affinity_stats, fused_affinity_build, scales_from_topk
 from .power import PowerOperator
 
 
@@ -86,16 +88,66 @@ def _gram_binding(use_pallas: bool):
 # ---------------------------------------------------------------------------
 
 
+def _dense_transpose_matmat(a):
+    """Local Aᵀ V binding for explicit (stored-A) operators: positivity-only
+    transpose product for the symmetrized reachability probe — plain jnp,
+    probe-frequency work (a handful of matvecs), never the power sweep."""
+    def matmat_t(v):
+        return a.astype(jnp.float32).T @ v.astype(jnp.float32)
+    return matmat_t
+
+
 def explicit_operator(inp, *, spec: AffinitySpec | None = None,
                       kind: AffinityKind = "cosine_shifted",
                       sigma: float = 1.0, a_dtype=jnp.float32,
                       tile: int | None = None,
-                      use_pallas: bool = True) -> PowerOperator:
+                      use_pallas: bool = True,
+                      block_sparse: bool = True) -> PowerOperator:
     """Paper-faithful: build A once (optionally bf16-stored, O4), then
     fused degree-normalized mat-mat sweeps. ``inp`` is row-normalized
-    features for the cosine kinds, raw features for rbf. Non-dense specs
-    run the streamed pass-1 statistics first; the build masks in-tile."""
+    features for the cosine kinds, raw features for rbf.
+
+    Truncated specs with ``block_sparse=True`` (the default) take the
+    one-pass fused build (core/graph.py::fused_affinity_build) and route
+    every sweep through the block-CSR plan so sweep traffic tracks nnz
+    (DESIGN.md §13); ``block_sparse=False`` keeps the dense-storage
+    two-pass path — bitwise-equal results, the comparison baseline. Dense
+    specs always take the unchanged dense path. Truncated specs also bind
+    ``matmat_t`` so the component probe walks A + Aᵀ reachability."""
     spec = as_affinity_spec(spec, kind=kind, sigma=sigma)
+    n, m = inp.shape
+    use_bs = block_sparse and spec.truncated
+    if use_bs:
+        # one pinned tile resolution serves the build, the plan, and every
+        # sweep — the plan's block coordinates are grid-relative, and the
+        # autotuner's choice is call-shape-sensitive (kernels/ops.py)
+        tm, tn = ops.resolve_tiles(n, tile, tile, m=m,
+                                   a_bytes=jnp.dtype(a_dtype).itemsize)
+        # a single column block can skip nothing, and its traced grid
+        # lowers through a dynamic loop while the dense kernel's one-step
+        # static grid inlines — a fusion difference the bitwise discipline
+        # (DESIGN.md §13) forbids; degenerate grids keep the dense path
+        use_bs = -(-n // tn) > 1
+    if use_bs:
+        scale = None
+        if spec.adaptive:
+            scale = scales_from_topk(ops.row_topk(
+                inp, k=spec.scale_k, stat="neg_sqdist", spec=spec,
+                tm=tile, tn=tile, force_reference=not use_pallas))
+        a, d, _thr = fused_affinity_build(
+            inp, spec=spec, scale_r=scale, scale_c=scale, tm=tm, tn=tn,
+            use_pallas=use_pallas, a_dtype=a_dtype)
+        counts, col_idx, max_b = block_plan(dense_block_live(a, tm, tn))
+
+        def matmat(v):
+            return ops.block_sparse_matmat(
+                a, v, d, counts, col_idx, max_b, tm=tm, tn=tn,
+                force_reference=not use_pallas)
+
+        return PowerOperator(matmat=matmat, degree=d,
+                             gram=_gram_binding(use_pallas),
+                             matmat_t=_dense_transpose_matmat(a))
+
     scale, thr = affinity_stats(inp, spec, tile=tile, use_pallas=use_pallas)
     a, d = ops.affinity_and_degree(
         inp, spec=spec, scale_r=scale, scale_c=scale, thr=thr,
@@ -107,19 +159,66 @@ def explicit_operator(inp, *, spec: AffinitySpec | None = None,
             a, v, d, tm=tile, tn=tile, force_reference=not use_pallas)
 
     return PowerOperator(matmat=matmat, degree=d,
-                         gram=_gram_binding(use_pallas))
+                         gram=_gram_binding(use_pallas),
+                         matmat_t=(_dense_transpose_matmat(a)
+                                   if spec.truncated else None))
 
 
 def streaming_operator(inp, *, spec: AffinitySpec | None = None,
                        kind: AffinityKind = "cosine_shifted",
                        sigma: float = 1.0, tile: int | None = None,
-                       use_pallas: bool = True) -> PowerOperator:
+                       use_pallas: bool = True,
+                       block_sparse: bool = True) -> PowerOperator:
     """A-free: affinity tiles are regenerated from the feature slabs inside
     every power step (DESIGN.md §5). All specs incl. adaptive/kNN rbf;
     peak memory O(n m + n r + n k), no (n, n) allocation ever — pass 1
-    streams through the row-top-k kernel."""
+    streams through the row-top-k kernel.
+
+    Truncated specs with ``block_sparse=True`` pay one extra A-free
+    liveness pass at build time (kernels/block_sparse.block_liveness) and
+    then regenerate ONLY the live feature tiles in every sweep — same
+    bitwise results as the dense-grid streaming sweep, nnz-scaled grid
+    steps (DESIGN.md §13). Truncated specs bind ``matmat_t`` (the
+    column-thresholded streaming stripe — still A-free) so the component
+    probe walks A + Aᵀ reachability."""
     spec = as_affinity_spec(spec, kind=kind, sigma=sigma)
+    n, m = inp.shape
     scale, thr = affinity_stats(inp, spec, tile=tile, use_pallas=use_pallas)
+
+    matmat_t = None
+    if spec.truncated:
+        def matmat_t(v):
+            return ops.streaming_matmat(
+                inp, v, None, spec=spec, scale_r=scale, scale_c=scale,
+                thr=None, thr_c=thr, tm=tile, tn=tile,
+                force_reference=not use_pallas)
+
+    use_bs = block_sparse and spec.truncated
+    if use_bs:
+        tm, tn = ops.resolve_tiles(n, tile, tile, m=m)
+        # degenerate single-column-block grids keep the dense-grid kernel
+        # (see explicit_operator — same bitwise-discipline rationale)
+        use_bs = -(-n // tn) > 1
+    if use_bs:
+        live = ops.block_liveness(
+            inp, spec=spec, scale_r=scale, scale_c=scale, thr=thr,
+            tm=tm, tn=tn, force_reference=not use_pallas)
+        counts, col_idx, max_b = block_plan(live)
+        d = ops.block_sparse_streaming_degree(
+            inp, counts=counts, col_idx=col_idx, max_b=max_b,
+            spec=spec, scale_r=scale, scale_c=scale, thr=thr,
+            tm=tm, tn=tn, force_reference=not use_pallas)
+
+        def matmat(v):
+            return ops.block_sparse_streaming_matmat(
+                inp, v, d, counts=counts, col_idx=col_idx, max_b=max_b,
+                spec=spec, scale_r=scale, scale_c=scale, thr=thr,
+                tm=tm, tn=tn, force_reference=not use_pallas)
+
+        return PowerOperator(matmat=matmat, degree=d,
+                             gram=_gram_binding(use_pallas),
+                             matmat_t=matmat_t)
+
     d = ops.streaming_degree(
         inp, spec=spec, scale_r=scale, scale_c=scale, thr=thr,
         tm=tile, tn=tile, force_reference=not use_pallas,
@@ -132,7 +231,8 @@ def streaming_operator(inp, *, spec: AffinitySpec | None = None,
         )
 
     return PowerOperator(matmat=matmat, degree=d,
-                         gram=_gram_binding(use_pallas))
+                         gram=_gram_binding(use_pallas),
+                         matmat_t=matmat_t)
 
 
 def matrix_free_operator(xn, *, spec: AffinitySpec | None = None,
@@ -166,7 +266,8 @@ def sharded_explicit_operator(x_loc, *, axes,
                               sigma: float = 1.0, a_dtype=jnp.float32,
                               fold_shift: bool = False,
                               tile: int | None = None,
-                              use_pallas: bool = True) -> PowerOperator:
+                              use_pallas: bool = True,
+                              block_sparse: bool = True) -> PowerOperator:
     """Per-device (n/P, n) stripe of the Pallas affinity build; V is
     replicated per sweep via all-gather (O(n r) bytes/step against
     O(n²/P) local compute — collective-light).
@@ -182,6 +283,13 @@ def sharded_explicit_operator(x_loc, *, axes,
     (A V)_i = (ΣV − v_i + (A_cos V)_i)/2, d_i = (n − 1 + d_cos,i)/2.
     Folding is a storage-algebra trick on the DENSE matrix — a truncated
     row has no closed-form shift mass — so it requires a dense fixed spec.
+
+    Truncated specs with ``block_sparse=True`` take the fused one-pass
+    stripe build (thresholds from the stripe's own unmasked scores — the
+    full row is present, so the epilogue statistic equals the streamed
+    pass-1b bitwise) and block-CSR sweeps over the stripe's live tiles;
+    they also bind ``matmat_t`` (psum of the local stripe's transpose
+    partials) for the symmetrized component probe (DESIGN.md §13).
     """
     spec = as_affinity_spec(spec, kind=kind, sigma=sigma)
     if fold_shift and not spec.dense_fixed:
@@ -205,6 +313,42 @@ def sharded_explicit_operator(x_loc, *, axes,
             force_reference=not use_pallas)
         scale_loc = scales_from_topk(nk)
         scale_full = gather(scale_loc)
+
+    def _stripe_matmat_t(a_loc):
+        """Aᵀ V local chunk from the stored (n_loc, n) stripe: each device
+        contributes its stripe's transpose partial, psum completes the
+        column sums, and the local rows are sliced back out. Positivity-
+        only probe work — the O(n r) collective runs a handful of times."""
+        def matmat_t(v_loc):
+            part = a_loc.astype(jnp.float32).T @ v_loc.astype(jnp.float32)
+            return jax.lax.dynamic_slice_in_dim(psum(part), row0, n_loc)
+        return matmat_t
+
+    use_bs = block_sparse and spec.truncated
+    if use_bs:
+        tm, tn = ops.resolve_tiles(n, tile, tile, m=x_loc.shape[1],
+                                   a_bytes=jnp.dtype(a_dtype).itemsize)
+        # degenerate single-column-block grids keep the dense-grid kernel
+        # (see explicit_operator — same bitwise-discipline rationale)
+        use_bs = -(-n // tn) > 1
+    if use_bs:
+        a_loc, d_loc, thr_loc = fused_affinity_build(
+            x_loc, x_full, spec=spec, scale_r=scale_loc, scale_c=scale_full,
+            tm=tm, tn=tn, use_pallas=use_pallas, a_dtype=a_dtype,
+            row_offset=row0)
+        counts, col_idx, max_b = block_plan(dense_block_live(a_loc, tm, tn))
+
+        def matmat(v_loc):
+            v_full = gather(v_loc)
+            return ops.block_sparse_matmat(
+                a_loc, v_full, d_loc, counts, col_idx, max_b, tm=tm, tn=tn,
+                force_reference=not use_pallas)
+
+        return PowerOperator(matmat=matmat, degree=d_loc,
+                             sum=psum, max=pmax, all_gather=gather,
+                             gram=_gram_binding(use_pallas),
+                             matmat_t=_stripe_matmat_t(a_loc))
+
     if spec.truncated:
         tk = ops.row_topk(
             x_loc, x_full, k=spec.knn_k, stat="similarity", spec=spec,
@@ -246,7 +390,9 @@ def sharded_explicit_operator(x_loc, *, axes,
 
     return PowerOperator(matmat=matmat, degree=d_loc,
                          sum=psum, max=pmax, all_gather=gather,
-                         gram=_gram_binding(use_pallas))
+                         gram=_gram_binding(use_pallas),
+                         matmat_t=(_stripe_matmat_t(a_loc)
+                                   if spec.truncated else None))
 
 
 def sharded_matrix_free_operator(x_loc, *, axes,
@@ -277,6 +423,7 @@ def sharded_streaming_operator(x_loc, *, axes, mesh_size: int,
                                kind: AffinityKind = "cosine_shifted",
                                sigma: float = 1.0, tile: int | None = None,
                                use_pallas: bool = True,
+                               block_sparse: bool = True,
                                inject_fault: tuple | None = None
                                ) -> PowerOperator:
     """Row-striped A-free engine: each sweep ring-rotates the (n/P, m)
@@ -304,6 +451,21 @@ def sharded_streaming_operator(x_loc, *, axes, mesh_size: int,
     stages), moving O(n(m+r)/P) bytes each — O(n(m+r)) total per device,
     the all-gather equivalent, but with O(n m / P) residency instead of
     O(n m).
+
+    Truncated specs with ``block_sparse=True`` pay ONE extra liveness ring
+    at build time: each stage emits its (nI, nJ) live-block map (A-free,
+    kernels/block_sparse.block_liveness) into a stacked (P, nI, nJ) plan
+    ring, and every later degree/mat-mat stage runs the block-sparse
+    streaming kernel over stage ``s``'s slice of the stacked plan. The
+    traced ``max_b`` grid bound is the MAX over all stages, so the stage
+    launch is loop-invariant and one compiled kernel serves the whole
+    ring (DESIGN.md §13). Bitwise-equal to the dense-grid ring. Truncated
+    specs also bind ``matmat_t`` for the symmetrized component probe: a
+    third ring rotating (features, V, thr) together, each stage computing
+    the column-thresholded stripe (``thr_c`` — the arriving block's OWN
+    row thresholds applied on the column side; exact because tile scores
+    are bitwise symmetric) so the partials sum to the local rows of Aᵀ V
+    without ever materializing A.
 
     ``inject_fault`` (static; fault-injection harness only, DESIGN.md §12)
     corrupts one mat-mat ring stage: ``("ring_nan", s)`` poisons the V
@@ -375,6 +537,118 @@ def sharded_streaming_operator(x_loc, *, axes, mesh_size: int,
         return scale_loc, jax.lax.dynamic_slice_in_dim(
             scale_full, _col0(s), n_loc)
 
+    matmat_t = None
+    if spec.truncated:
+        def matmat_t(v_loc):
+            # ring Aᵀ V: rotate (features, V, thr) together; the arriving
+            # block's own row thresholds mask the stripe on the COLUMN side
+            # (thr_c), so each stage's tile (i, j) equals A[c0+j, r0+i] —
+            # tile scores are bitwise symmetric — and the stage partials
+            # sum to the local rows of Aᵀ V. Unnormalized (probe-only).
+            def partial(s, x_ring, v_ring, thr_ring):
+                scl_r, scl_c = _stage_scales(s)
+                return ops.streaming_matmat(
+                    x_loc, v_ring, None, x_ring, spec=spec,
+                    scale_r=scl_r, scale_c=scl_c, thr=None, thr_c=thr_ring,
+                    tm=tile, tn=tile, row_offset=row0, col_offset=_col0(s),
+                    force_reference=not use_pallas)
+
+            def stage(s, carry):
+                u, x_ring, v_ring, thr_ring = carry
+                u = u + partial(s, x_ring, v_ring, thr_ring)
+                return u, ring(x_ring), ring(v_ring), ring(thr_ring)
+            u0 = jnp.zeros((n_loc, v_loc.shape[1]), jnp.float32)
+            u, x_ring, v_ring, thr_ring = jax.lax.fori_loop(
+                0, mesh_size - 1, stage,
+                (u0, x_loc, v_loc.astype(jnp.float32), thr_loc))
+            return u + partial(mesh_size - 1, x_ring, v_ring, thr_ring)
+
+    use_bs = block_sparse and spec.truncated
+    if use_bs:
+        tm, tn = ops.resolve_tiles(n_loc, tile, tile, m=x_loc.shape[1])
+        # degenerate single-column-block stage grids keep the dense-grid
+        # ring (see explicit_operator — same bitwise-discipline rationale)
+        use_bs = -(-n_loc // tn) > 1
+    if use_bs:
+
+        def liveness_ring():
+            def partial(s, x_ring):
+                scl_r, scl_c = _stage_scales(s)
+                return ops.block_liveness(
+                    x_loc, x_ring, spec=spec, scale_r=scl_r, scale_c=scl_c,
+                    thr=thr_loc, tm=tm, tn=tn,
+                    row_offset=row0, col_offset=_col0(s),
+                    force_reference=not use_pallas)
+
+            def stage(s, carry):
+                acc, x_ring = carry
+                acc = jax.lax.dynamic_update_index_in_dim(
+                    acc, partial(s, x_ring), s, axis=0)
+                return acc, ring(x_ring)
+            n_i = -(-n_loc // tm)
+            n_j = -(-n_loc // tn)
+            acc, x_ring = jax.lax.fori_loop(
+                0, mesh_size - 1, stage,
+                (jnp.zeros((mesh_size, n_i, n_j), jnp.int32), x_loc))
+            return jax.lax.dynamic_update_index_in_dim(
+                acc, partial(mesh_size - 1, x_ring), mesh_size - 1, axis=0)
+
+        # stacked (P, nI, nJ) plan ring; max_b is the global max so the
+        # per-stage kernel launch is loop-invariant (one compiled program)
+        counts_all, col_idx_all, max_bs = jax.vmap(block_plan)(
+            liveness_ring())
+        max_b = jnp.max(max_bs)
+
+        def degree_sweep_bs():
+            def partial(s, x_ring):
+                scl_r, scl_c = _stage_scales(s)
+                return ops.block_sparse_streaming_degree(
+                    x_loc, x_ring, counts=counts_all[s],
+                    col_idx=col_idx_all[s], max_b=max_b,
+                    spec=spec, scale_r=scl_r, scale_c=scl_c,
+                    thr=thr_loc, tm=tm, tn=tn,
+                    row_offset=row0, col_offset=_col0(s),
+                    force_reference=not use_pallas)
+
+            def stage(s, carry):
+                d, x_ring = carry
+                return d + partial(s, x_ring), ring(x_ring)
+            d, x_ring = jax.lax.fori_loop(
+                0, mesh_size - 1, stage,
+                (jnp.zeros((n_loc,), jnp.float32), x_loc))
+            return d + partial(mesh_size - 1, x_ring)
+
+        d_loc = degree_sweep_bs()
+
+        def matmat(v_loc):
+            def partial(s, x_ring, v_ring):
+                if inject_fault is not None:
+                    v_ring = jnp.where(s == int(inject_fault[1]),
+                                       jnp.float32(jnp.nan), v_ring)
+                scl_r, scl_c = _stage_scales(s)
+                return ops.block_sparse_streaming_matmat(
+                    x_loc, v_ring, None, x_ring, counts=counts_all[s],
+                    col_idx=col_idx_all[s], max_b=max_b,
+                    spec=spec, scale_r=scl_r, scale_c=scl_c, thr=thr_loc,
+                    tm=tm, tn=tn, row_offset=row0, col_offset=_col0(s),
+                    force_reference=not use_pallas)
+
+            def stage(s, carry):
+                u, x_ring, v_ring = carry
+                u = u + partial(s, x_ring, v_ring)
+                return u, ring(x_ring), ring(v_ring)
+            u0 = jnp.zeros((n_loc, v_loc.shape[1]), jnp.float32)
+            u, x_ring, v_ring = jax.lax.fori_loop(
+                0, mesh_size - 1, stage,
+                (u0, x_loc, v_loc.astype(jnp.float32)))
+            u = u + partial(mesh_size - 1, x_ring, v_ring)
+            return u / jnp.maximum(d_loc, 1e-30)[:, None]
+
+        return PowerOperator(matmat=matmat, degree=d_loc,
+                             sum=psum, max=pmax, all_gather=gather,
+                             gram=_gram_binding(use_pallas),
+                             matmat_t=matmat_t)
+
     def degree_sweep():
         def partial(s, x_ring):
             scl_r, scl_c = _stage_scales(s)
@@ -421,4 +695,5 @@ def sharded_streaming_operator(x_loc, *, axes, mesh_size: int,
 
     return PowerOperator(matmat=matmat, degree=d_loc,
                          sum=psum, max=pmax, all_gather=gather,
-                         gram=_gram_binding(use_pallas))
+                         gram=_gram_binding(use_pallas),
+                         matmat_t=matmat_t)

@@ -91,6 +91,12 @@ class GPICConfig:
       fold_shift:   O5 — fold the cosine_shifted transform out of the
                     O(n²/P) build (sharded explicit engine only).
       tile:         Pallas tile edge override (None = static autotuner).
+      block_sparse: route truncated (kNN) specs through the fused one-pass
+                    build and the block-CSR sweeps, so sweep traffic
+                    tracks nnz instead of n² (DESIGN.md §13). False keeps
+                    the dense-storage two-pass path — bitwise-equal
+                    results, the comparison baseline. No effect on dense
+                    specs or the matrix-free engine.
       use_pallas:   False routes every op to the jnp reference oracles.
       seed:         key for k-means init + extra power vectors when
                     ``run_gpic`` isn't handed an explicit key.
@@ -103,6 +109,12 @@ class GPICConfig:
                     truncated (kNN) graphs; the count lands in
                     ``PICResult.health.n_components``. False skips the
                     probe's extra sweeps.
+      retry_on_fallback: when a kernel falls back to its reference oracle
+                    MID-RUN (``kernel_fallback:<op>`` would be noted), the
+                    trajectory mixes kernel and reference ops. True
+                    re-runs the whole pipeline on the reference oracles
+                    (``use_pallas=False``) for a CONSISTENT trajectory;
+                    the note upgrades to ``kernel_fallback_retried:<op>``.
     """
     engine: str = "explicit"
     mesh: Mesh | None = None
@@ -121,10 +133,12 @@ class GPICConfig:
     a_dtype: Any = jnp.float32
     fold_shift: bool = False
     tile: int | None = None
+    block_sparse: bool = True
     use_pallas: bool = True
     seed: int = 0
     sanitize: bool = False
     component_probe: bool = True
+    retry_on_fallback: bool = False
 
     def with_(self, **updates) -> "GPICConfig":
         """Functional update (``dataclasses.replace`` with a shorter name)."""
@@ -246,36 +260,47 @@ def run_gpic(
                   snapshot_iters=snapshot_iters,
                   residual_tol=cfg.residual_tol)
 
-    if cfg.mesh is None:
-        if cfg.engine == "matrix_free":
-            res = gpic_matrix_free(x, k, eps=cfg.eps_scale / x.shape[0],
-                                   use_pallas=cfg.use_pallas, **common)
-        else:
-            res = gpic(
-                x, k, engine=cfg.engine, a_dtype=cfg.a_dtype,
-                tile=cfg.tile, use_pallas=cfg.use_pallas,
-                eps=cfg.eps_scale / x.shape[0],
-                probe_components=cfg.component_probe, **common)
-    else:
-        shard_axes = (cfg.shard_axes if isinstance(cfg.shard_axes, str)
-                      else tuple(cfg.shard_axes))
-        if cfg.engine == "matrix_free":
-            res = distributed_gpic_matrix_free(
-                x, k, mesh=cfg.mesh, shard_axes=shard_axes,
-                eps_scale=cfg.eps_scale, use_pallas=cfg.use_pallas, **common)
-        else:
-            res = distributed_gpic(
-                x, k, mesh=cfg.mesh, shard_axes=shard_axes,
-                engine=cfg.engine, eps_scale=cfg.eps_scale,
-                a_dtype=cfg.a_dtype, fold_shift=cfg.fold_shift,
-                tile=cfg.tile, use_pallas=cfg.use_pallas,
-                probe_components=cfg.component_probe, **common)
+    def _route(c: GPICConfig) -> PICResult:
+        if c.mesh is None:
+            if c.engine == "matrix_free":
+                return gpic_matrix_free(x, k, eps=c.eps_scale / x.shape[0],
+                                        use_pallas=c.use_pallas, **common)
+            return gpic(
+                x, k, engine=c.engine, a_dtype=c.a_dtype,
+                tile=c.tile, use_pallas=c.use_pallas,
+                block_sparse=c.block_sparse,
+                eps=c.eps_scale / x.shape[0],
+                probe_components=c.component_probe, **common)
+        shard_axes = (c.shard_axes if isinstance(c.shard_axes, str)
+                      else tuple(c.shard_axes))
+        if c.engine == "matrix_free":
+            return distributed_gpic_matrix_free(
+                x, k, mesh=c.mesh, shard_axes=shard_axes,
+                eps_scale=c.eps_scale, use_pallas=c.use_pallas, **common)
+        return distributed_gpic(
+            x, k, mesh=c.mesh, shard_axes=shard_axes,
+            engine=c.engine, eps_scale=c.eps_scale,
+            a_dtype=c.a_dtype, fold_shift=c.fold_shift,
+            tile=c.tile, use_pallas=c.use_pallas,
+            block_sparse=c.block_sparse,
+            probe_components=c.component_probe, **common)
+
+    res = _route(cfg)
 
     # attach host-side events (sanitization, kernel fallbacks that first
     # fired during this run) and apply the unusable-result checks
+    new_fallback_ops = tuple(sorted(
+        op for op in ops.kernel_fallbacks() if op not in fallbacks_before))
+    note_tag = "kernel_fallback"
+    if new_fallback_ops and cfg.retry_on_fallback and cfg.use_pallas:
+        # a mid-run fallback leaves a MIXED kernel/reference trajectory
+        # (only the ops that failed were served by their oracles); re-run
+        # the whole pipeline on the reference oracles so every sweep of
+        # the reported result came from ONE consistent implementation
+        res = _route(cfg.with_(use_pallas=False))
+        note_tag = "kernel_fallback_retried"
     new_fallbacks = tuple(
-        f"kernel_fallback:{op}" for op in sorted(ops.kernel_fallbacks())
-        if op not in fallbacks_before)
+        f"{note_tag}:{op}" for op in new_fallback_ops)
     notes = tuple(health_notes) + new_fallbacks
     if res.health is not None and notes:
         res = replace(res, health=replace(

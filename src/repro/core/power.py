@@ -91,6 +91,12 @@ class PowerOperator:
       gram: maps the local (n_loc, r) chunk to its LOCAL (r, r) Gram
         VᵀV partial; ``sum`` finishes the cross-chunk combine. Defaults to
         the jnp oracle math; operator builders bind the Pallas kernel.
+      matmat_t: maps the local (n_loc, r) chunk of V to the local chunk of
+        Aᵀ V — UNNORMALIZED, positivity-only semantics: the symmetrized
+        reachability probe (core/health.py) unions its sign pattern with
+        the forward sweep's to walk the kNN graph's reverse edges. Bound
+        only by builders of truncated specs (the only graphs that can be
+        asymmetric); None means "A is symmetric, forward reach suffices".
     """
     matmat: Callable[[jax.Array], jax.Array]
     degree: jax.Array | None = None
@@ -98,6 +104,7 @@ class PowerOperator:
     max: Callable[[jax.Array], jax.Array] = field(default=_identity)
     all_gather: Callable[[jax.Array], jax.Array] = field(default=_identity)
     gram: Callable[[jax.Array], jax.Array] = field(default=_gram_jnp)
+    matmat_t: Callable[[jax.Array], jax.Array] | None = None
 
 
 def as_operator(op) -> PowerOperator:

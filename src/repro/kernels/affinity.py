@@ -76,11 +76,14 @@ def tile_masks(i, j, off_ref, *, tm: int, tn: int, n_rows: int, n_cols: int):
     return (grows != gcols) & (lrows < n_rows) & (lcols < n_cols)
 
 
-def unpack_policy_refs(rest, adaptive: bool, truncate: bool):
-    """(sclr, sclc, thr) refs from a kernel's flag-dependent operand tail.
-    Shared by the affinity, streaming, and row-top-k kernels so the
-    operand order is defined in exactly one place."""
-    sclr_ref = sclc_ref = thr_ref = None
+def unpack_policy_refs(rest, adaptive: bool, truncate: bool,
+                       truncate_col: bool = False):
+    """(sclr, sclc, thr, thr_c) refs from a kernel's flag-dependent operand
+    tail. Shared by the affinity, streaming, and row-top-k kernels so the
+    operand order is defined in exactly one place. ``truncate_col`` is the
+    transpose-side mask (a column's OWN row threshold, applied while
+    computing Aᵀ products for the reachability probe)."""
+    sclr_ref = sclc_ref = thr_ref = thr_c_ref = None
     rest = list(rest)
     if adaptive:
         sclr_ref, sclc_ref = rest[0], rest[1]
@@ -88,16 +91,20 @@ def unpack_policy_refs(rest, adaptive: bool, truncate: bool):
     if truncate:
         thr_ref = rest[0]
         rest = rest[1:]
+    if truncate_col:
+        thr_c_ref = rest[0]
+        rest = rest[1:]
     assert not rest
-    return sclr_ref, sclc_ref, thr_ref
+    return sclr_ref, sclc_ref, thr_ref, thr_c_ref
 
 
-def policy_specs_and_operands(scale_r, scale_c, thr, *, tm, tn, rp, cp,
-                              n_rows, n_cols):
+def policy_specs_and_operands(scale_r, scale_c, thr, thr_c=None, *, tm, tn,
+                              rp, cp, n_rows, n_cols):
     """(in_specs, operands) for the pass-1 policy columns — the ONE
     definition of their padding semantics, which the cross-engine bitwise
     discipline rests on: padded rows carry neutral values (scale 1,
-    threshold +inf, so padding masks to exact zeros)."""
+    threshold +inf, so padding masks to exact zeros). ``thr_c`` is the
+    (C,) column-side threshold of the transpose mask (padded +inf too)."""
     in_specs, operands = [], []
     if scale_r is not None:
         sclr = jnp.pad(scale_r.astype(jnp.float32), (0, rp - n_rows),
@@ -112,6 +119,11 @@ def policy_specs_and_operands(scale_r, scale_c, thr, *, tm, tn, rp, cp,
                         constant_values=jnp.inf)[:, None]
         in_specs.append(pl.BlockSpec((tm, 1), lambda i, j: (i, 0)))
         operands.append(thr_p)
+    if thr_c is not None:
+        thr_cp = jnp.pad(thr_c.astype(jnp.float32), (0, cp - n_cols),
+                         constant_values=jnp.inf)[:, None]
+        in_specs.append(pl.BlockSpec((tn, 1), lambda i, j: (j, 0)))
+        operands.append(thr_cp)
     return in_specs, operands
 
 
@@ -124,7 +136,7 @@ def _affinity_kernel(
     refs = list(refs)
     a_ref, d_ref = refs[-2], refs[-1]
     xr_ref, xc_ref, sqr_ref, sqc_ref = refs[:4]
-    sclr_ref, sclc_ref, thr_ref = unpack_policy_refs(
+    sclr_ref, sclc_ref, thr_ref, _ = unpack_policy_refs(
         refs[4:-2], adaptive, truncate)
 
     i = pl.program_id(0)

@@ -38,6 +38,14 @@ import jax.numpy as jnp
 
 from . import ref
 from .affinity import affinity_and_degree as _affinity_pallas
+from .block_sparse import block_liveness as _liveness_pallas
+from .block_sparse import block_sparse_matmat as _bs_matmat_pallas
+from .block_sparse import (
+    block_sparse_streaming_degree as _bs_degree_streaming,
+)
+from .block_sparse import (
+    block_sparse_streaming_matmat as _bs_streaming_pallas,
+)
 from .gram import gram as _gram_pallas
 from .kmeans_assign import kmeans_assign as _assign_pallas
 from .power_step import degree_normalized_matmat as _dnmm_pallas
@@ -177,6 +185,17 @@ def _tiles(n: int, tm: int | None, tn: int | None, *, r: int = 1,
     return tm or atm, tn or atn
 
 
+def resolve_tiles(n: int, tm: int | None = None, tn: int | None = None, *,
+                  r: int = 1, m: int = 0, a_bytes: int = 4) -> tuple[int, int]:
+    """Public tile resolution with the wrappers' exact policy — operators
+    building a block plan call this ONCE and pass the pinned (tm, tn) into
+    every sweep that consumes the plan: the autotuner's choice depends on
+    the call shape (r enters the VMEM fit), so per-call resolution could
+    hand the probe's r=1 matmat a different grid than the power sweep's
+    and misalign the plan's block coordinates."""
+    return _tiles(n, tm, tn, r=r, m=m, a_bytes=a_bytes)
+
+
 # -- registrations ----------------------------------------------------------
 
 register("affinity_and_degree", "pallas")(_affinity_pallas)
@@ -197,6 +216,16 @@ register("kmeans_assign", "pallas")(_assign_pallas)
 register("kmeans_assign", "reference")(ref.kmeans_assign_ref)
 register("row_topk", "pallas")(_row_topk_pallas)
 register("row_topk", "reference")(ref.row_topk_ref)
+register("block_sparse_matmat", "pallas")(_bs_matmat_pallas)
+register("block_sparse_matmat", "reference")(ref.block_sparse_matmat_ref)
+register("block_sparse_streaming_matmat", "streaming")(_bs_streaming_pallas)
+register("block_sparse_streaming_matmat", "reference")(
+    ref.block_sparse_streaming_matmat_ref)
+register("block_sparse_streaming_degree", "streaming")(_bs_degree_streaming)
+register("block_sparse_streaming_degree", "reference")(
+    ref.block_sparse_streaming_degree_ref)
+register("block_liveness", "pallas")(_liveness_pallas)
+register("block_liveness", "reference")(ref.block_liveness_ref)
 
 
 def _spec_kind_sigma(spec, kind: str, sigma: float) -> tuple[str, float]:
@@ -286,7 +315,8 @@ def degree_normalized_matmat(a, v, d, *, tm=None, tn=None,
 
 def streaming_matmat(x, v, d=None, xc=None, *, kind="cosine_shifted",
                      sigma=1.0, spec=None, scale_r=None, scale_c=None,
-                     thr=None, tm=None, tn=None, row_offset=0, col_offset=0,
+                     thr=None, thr_c=None, tm=None, tn=None,
+                     row_offset=0, col_offset=0,
                      force_reference=False, mode=None):
     """U = (A V)/d with A regenerated on the fly — no (n, n) allocation.
 
@@ -294,7 +324,9 @@ def streaming_matmat(x, v, d=None, xc=None, *, kind="cosine_shifted",
     at (row_offset, col_offset) against col features xc (C, m) and V
     (C, r) — one ring stage of the sharded streaming engine. ``d=None``
     skips the degree normalization so stripe partials can accumulate.
-    ``spec``/``scale_r``/``scale_c``/``thr`` as in :func:`affinity_and_degree`.
+    ``spec``/``scale_r``/``scale_c``/``thr`` as in :func:`affinity_and_degree`;
+    ``thr_c`` (C,) applies each COLUMN's own threshold instead — the
+    Aᵀ-stripe product of the symmetrized reachability probe.
     """
     kind, sigma = _spec_kind_sigma(spec, kind, sigma)
     mode = _resolve_mode(mode, force_reference, default="streaming")
@@ -304,7 +336,7 @@ def streaming_matmat(x, v, d=None, xc=None, *, kind="cosine_shifted",
                                        row_offset=row_offset,
                                        col_offset=col_offset,
                                        scale_r=scale_r, scale_c=scale_c,
-                                       thr=thr)
+                                       thr=thr, thr_c=thr_c)
 
     if mode == "reference":
         return _ref()
@@ -314,7 +346,7 @@ def streaming_matmat(x, v, d=None, xc=None, *, kind="cosine_shifted",
         "streaming_matmat", mode)(
         x, v, d, xc, kind=kind, sigma=sigma, tm=tm_, tn=tn_,
         row_offset=row_offset, col_offset=col_offset,
-        scale_r=scale_r, scale_c=scale_c, thr=thr,
+        scale_r=scale_r, scale_c=scale_c, thr=thr, thr_c=thr_c,
         interpret=_interpret(),
     ), _ref)
 
@@ -378,6 +410,117 @@ def row_topk(x, xc=None, *, k, stat="similarity", kind="cosine_shifted",
         x, xc, k=k, stat=stat, kind=kind, sigma=sigma, tm=tm_, tn=tn_,
         row_offset=row_offset, col_offset=col_offset,
         scale_r=scale_r, scale_c=scale_c,
+        interpret=_interpret(),
+    ), _ref)
+
+
+def block_sparse_matmat(a, v, d, counts, col_idx, max_b, *, tm, tn,
+                        force_reference=False, mode=None):
+    """U = (A V)/d visiting only the plan's live blocks (DESIGN.md §13).
+
+    Tiles are REQUIRED here (no autotuning): the plan's block coordinates
+    are only meaningful on the grid they were computed for, so the caller
+    pins (tm, tn) once via :func:`resolve_tiles` and reuses them for the
+    plan and every sweep. Bitwise-equal to :func:`degree_normalized_matmat`
+    at the same tiles.
+    """
+    mode = _resolve_mode(mode, force_reference)
+
+    def _ref():
+        return ref.block_sparse_matmat_ref(a, v, d, counts, col_idx,
+                                           tm=tm, tn=tn)
+
+    if mode == "reference":
+        return _ref()
+    return _guarded("block_sparse_matmat", lambda: dispatch(
+        "block_sparse_matmat", mode)(
+        a, v, d, counts, col_idx, max_b, tm=tm, tn=tn,
+        interpret=_interpret(),
+    ), _ref)
+
+
+def block_sparse_streaming_matmat(x, v, d=None, xc=None, *, counts, col_idx,
+                                  max_b, kind="cosine_shifted", sigma=1.0,
+                                  spec=None, scale_r=None, scale_c=None,
+                                  thr=None, tm, tn, row_offset=0,
+                                  col_offset=0, force_reference=False,
+                                  mode=None):
+    """Streaming U = (A V)/d regenerating only live feature tiles — the
+    A-free twin of :func:`block_sparse_matmat` (same pinned-tile contract;
+    ``d=None`` leaves ring-stage partials unnormalized)."""
+    kind, sigma = _spec_kind_sigma(spec, kind, sigma)
+    mode = _resolve_mode(mode, force_reference, default="streaming")
+
+    def _ref():
+        return ref.block_sparse_streaming_matmat_ref(
+            x, v, d, xc, counts=counts, col_idx=col_idx, tm=tm, tn=tn,
+            kind=kind, sigma=sigma,
+            row_offset=row_offset, col_offset=col_offset,
+            scale_r=scale_r, scale_c=scale_c, thr=thr)
+
+    if mode == "reference":
+        return _ref()
+    return _guarded("block_sparse_streaming_matmat", lambda: dispatch(
+        "block_sparse_streaming_matmat", mode)(
+        x, v, d, xc, counts=counts, col_idx=col_idx, max_b=max_b,
+        kind=kind, sigma=sigma, tm=tm, tn=tn,
+        row_offset=row_offset, col_offset=col_offset,
+        scale_r=scale_r, scale_c=scale_c, thr=thr,
+        interpret=_interpret(),
+    ), _ref)
+
+
+def block_sparse_streaming_degree(x, xc=None, *, counts, col_idx, max_b,
+                                  kind="cosine_shifted", sigma=1.0, spec=None,
+                                  scale_r=None, scale_c=None, thr=None,
+                                  tm, tn, row_offset=0, col_offset=0,
+                                  force_reference=False, mode=None):
+    """Degree vector over live blocks only (same pinned-tile contract)."""
+    kind, sigma = _spec_kind_sigma(spec, kind, sigma)
+    mode = _resolve_mode(mode, force_reference, default="streaming")
+
+    def _ref():
+        return ref.block_sparse_streaming_degree_ref(
+            x, xc, counts=counts, col_idx=col_idx, tm=tm, tn=tn,
+            kind=kind, sigma=sigma,
+            row_offset=row_offset, col_offset=col_offset,
+            scale_r=scale_r, scale_c=scale_c, thr=thr)
+
+    if mode == "reference":
+        return _ref()
+    return _guarded("block_sparse_streaming_degree", lambda: dispatch(
+        "block_sparse_streaming_degree", mode)(
+        x, xc, counts=counts, col_idx=col_idx, max_b=max_b,
+        kind=kind, sigma=sigma, tm=tm, tn=tn,
+        row_offset=row_offset, col_offset=col_offset,
+        scale_r=scale_r, scale_c=scale_c, thr=thr,
+        interpret=_interpret(),
+    ), _ref)
+
+
+def block_liveness(x, xc=None, *, kind="cosine_shifted", sigma=1.0, spec=None,
+                   scale_r=None, scale_c=None, thr=None, tm, tn,
+                   row_offset=0, col_offset=0, force_reference=False,
+                   mode=None):
+    """(nI, nJ) int32 live-block map of the masked stripe, A-free — the
+    plan source for streaming engines (explicit engines read liveness off
+    the stored matrix with core.affinity.dense_block_live instead)."""
+    kind, sigma = _spec_kind_sigma(spec, kind, sigma)
+    mode = _resolve_mode(mode, force_reference)
+
+    def _ref():
+        return ref.block_liveness_ref(
+            x, xc, tm=tm, tn=tn, kind=kind, sigma=sigma,
+            row_offset=row_offset, col_offset=col_offset,
+            scale_r=scale_r, scale_c=scale_c, thr=thr)
+
+    if mode == "reference":
+        return _ref()
+    return _guarded("block_liveness", lambda: dispatch(
+        "block_liveness", mode)(
+        x, xc, kind=kind, sigma=sigma, tm=tm, tn=tn,
+        row_offset=row_offset, col_offset=col_offset,
+        scale_r=scale_r, scale_c=scale_c, thr=thr,
         interpret=_interpret(),
     ), _ref)
 

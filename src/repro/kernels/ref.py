@@ -142,12 +142,17 @@ def affinity_matmat_ref(
     scale_r: jax.Array | None = None,
     scale_c: jax.Array | None = None,
     thr: jax.Array | None = None,
+    thr_c: jax.Array | None = None,
 ) -> jax.Array:
-    """Oracle for kernels.streaming.affinity_matmat: (A @ V) / d, dense A."""
+    """Oracle for kernels.streaming.affinity_matmat: (A @ V) / d, dense A.
+    ``thr_c`` masks each COLUMN below its own threshold (the Aᵀ-stripe
+    product of the symmetrized reachability probe)."""
     a, _ = affinity_and_degree_ref(x, xc, kind=kind, sigma=sigma,
                                    row_offset=row_offset,
                                    col_offset=col_offset,
                                    scale_r=scale_r, scale_c=scale_c, thr=thr)
+    if thr_c is not None:
+        a = jnp.where(a >= thr_c.astype(jnp.float32)[None, :], a, 0.0)
     u = a @ v.astype(jnp.float32)
     if d is None:
         return u
@@ -212,3 +217,115 @@ def kmeans_assign_ref(
     cc = jnp.sum(c * c, axis=1)[None, :]
     d2 = xx + cc - 2.0 * (x @ c.T)
     return jnp.argmin(d2, axis=1).astype(jnp.int32), jnp.min(d2, axis=1)
+
+
+def _plan_live_ref(counts: jax.Array, col_idx: jax.Array) -> jax.Array:
+    """(nI, nJ) boolean live map from a block plan (scatter with .max so
+    the padded dead-id tail never clobbers a live block)."""
+    n_i, n_j = col_idx.shape
+    slot_live = jnp.arange(n_j)[None, :] < counts[:, None]
+    live = jnp.zeros((n_i, n_j), bool)
+    return live.at[jnp.arange(n_i)[:, None], col_idx].max(slot_live)
+
+
+def _apply_plan_ref(a: jax.Array, counts, col_idx, tm: int, tn: int):
+    """Zero every block of ``a`` the plan marks dead (tile grid padded to
+    (tm, tn) multiples like the kernels pad)."""
+    n_rows, n_cols = a.shape
+    rp = -(-n_rows // tm) * tm
+    cp = -(-n_cols // tn) * tn
+    ap = jnp.pad(a, ((0, rp - n_rows), (0, cp - n_cols)))
+    live = _plan_live_ref(counts, col_idx)
+    mask = jnp.repeat(jnp.repeat(live, tm, axis=0), tn, axis=1)
+    return jnp.where(mask, ap, 0.0)[:n_rows, :n_cols]
+
+
+def block_sparse_matmat_ref(
+    a: jax.Array, v: jax.Array, d: jax.Array,
+    counts: jax.Array, col_idx: jax.Array, *, tm: int, tn: int
+) -> jax.Array:
+    """Oracle for kernels.block_sparse.block_sparse_matmat: the plan's dead
+    blocks contribute nothing, everything else is the dense oracle."""
+    return degree_normalized_matmat_ref(
+        _apply_plan_ref(a.astype(jnp.float32), counts, col_idx, tm, tn), v, d)
+
+
+def block_sparse_streaming_matmat_ref(
+    x: jax.Array,
+    v: jax.Array,
+    d: jax.Array | None = None,
+    xc: jax.Array | None = None,
+    *,
+    counts: jax.Array,
+    col_idx: jax.Array,
+    tm: int,
+    tn: int,
+    kind: str = "cosine_shifted",
+    sigma: float = 1.0,
+    row_offset: jax.Array | int = 0,
+    col_offset: jax.Array | int = 0,
+    scale_r: jax.Array | None = None,
+    scale_c: jax.Array | None = None,
+    thr: jax.Array | None = None,
+) -> jax.Array:
+    """Oracle for kernels.block_sparse.block_sparse_streaming_matmat."""
+    a, _ = affinity_and_degree_ref(x, xc, kind=kind, sigma=sigma,
+                                   row_offset=row_offset,
+                                   col_offset=col_offset,
+                                   scale_r=scale_r, scale_c=scale_c, thr=thr)
+    u = _apply_plan_ref(a, counts, col_idx, tm, tn) @ v.astype(jnp.float32)
+    if d is None:
+        return u
+    return _floored_degree_divide(u, d[:, None])
+
+
+def block_sparse_streaming_degree_ref(
+    x: jax.Array,
+    xc: jax.Array | None = None,
+    *,
+    counts: jax.Array,
+    col_idx: jax.Array,
+    tm: int,
+    tn: int,
+    kind: str = "cosine_shifted",
+    sigma: float = 1.0,
+    row_offset: jax.Array | int = 0,
+    col_offset: jax.Array | int = 0,
+    scale_r: jax.Array | None = None,
+    scale_c: jax.Array | None = None,
+    thr: jax.Array | None = None,
+) -> jax.Array:
+    """Oracle for kernels.block_sparse.block_sparse_streaming_degree."""
+    a, _ = affinity_and_degree_ref(x, xc, kind=kind, sigma=sigma,
+                                   row_offset=row_offset,
+                                   col_offset=col_offset,
+                                   scale_r=scale_r, scale_c=scale_c, thr=thr)
+    return jnp.sum(_apply_plan_ref(a, counts, col_idx, tm, tn), axis=1)
+
+
+def block_liveness_ref(
+    x: jax.Array,
+    xc: jax.Array | None = None,
+    *,
+    tm: int,
+    tn: int,
+    kind: str = "cosine_shifted",
+    sigma: float = 1.0,
+    row_offset: jax.Array | int = 0,
+    col_offset: jax.Array | int = 0,
+    scale_r: jax.Array | None = None,
+    scale_c: jax.Array | None = None,
+    thr: jax.Array | None = None,
+) -> jax.Array:
+    """Oracle for kernels.block_sparse.block_liveness: per-(tm, tn)-tile
+    any-nonzero of the masked stripe, padding blocks dead."""
+    a, _ = affinity_and_degree_ref(x, xc, kind=kind, sigma=sigma,
+                                   row_offset=row_offset,
+                                   col_offset=col_offset,
+                                   scale_r=scale_r, scale_c=scale_c, thr=thr)
+    n_rows, n_cols = a.shape
+    rp = -(-n_rows // tm) * tm
+    cp = -(-n_cols // tn) * tn
+    ap = jnp.pad(a, ((0, rp - n_rows), (0, cp - n_cols)))
+    tiles = ap.reshape(rp // tm, tm, cp // tn, tn)
+    return jnp.any(tiles != 0, axis=(1, 3)).astype(jnp.int32)

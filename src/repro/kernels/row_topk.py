@@ -76,7 +76,7 @@ def _row_topk_kernel(
     refs = list(refs)
     o_ref = refs[-1]                   # (TM, K) running top-k buffer
     xr_ref, xc_ref, sqr_ref, sqc_ref = refs[:4]
-    sclr_ref, sclc_ref, _thr = unpack_policy_refs(
+    sclr_ref, sclc_ref, _thr, _thr_c = unpack_policy_refs(
         refs[4:-1], adaptive, truncate=False)
 
     i = pl.program_id(0)
@@ -195,3 +195,31 @@ def row_topk(
         interpret=interpret,
     )(*operands, *pol_ops)
     return out[:n_rows]
+
+
+def topk_thresholds_from_scores(
+    scores: jax.Array,
+    *,
+    k: int,
+    row_offset: jax.Array | int = 0,
+    col_offset: jax.Array | int = 0,
+) -> jax.Array:
+    """(R,) per-row k-th-largest similarity from an UNMASKED score stripe —
+    the fused one-pass build's threshold epilogue (DESIGN.md §13).
+
+    ``scores`` is the stripe the build kernel writes with ``thr=None``: the
+    true similarity values everywhere except the global diagonal, which the
+    kernel masks to 0. The diagonal is re-excluded here BY INDEX (never by
+    value — plain-cosine scores can be negative, so a written 0 could
+    outrank real entries) and the k-th order statistic taken with
+    ``jnp.partition`` (an O(n) selection — an order of magnitude faster
+    than ``lax.top_k``'s sorted-prefix on CPU, and the threshold only
+    needs the VALUE, not the sorted prefix). Selection is exact, so the
+    statistic equals the one the streamed ``row_topk`` kernel keeps: both
+    paths score tiles through the shared ``affinity_tile_transform``, so
+    the thresholds are bitwise-equal to the two-pass build's.
+    """
+    grows = row_offset + jnp.arange(scores.shape[0])[:, None]
+    gcols = col_offset + jnp.arange(scores.shape[1])[None, :]
+    s = jnp.where(grows == gcols, _NEG_INF, scores.astype(jnp.float32))
+    return -jnp.partition(-s, k - 1, axis=1)[:, k - 1]

@@ -58,11 +58,15 @@ from .affinity import (
 
 
 def _masked_tile(i, j, off_ref, xr_ref, xc_ref, sqr_ref, sqc_ref,
-                 sclr_ref, sclc_ref, thr_ref,
+                 sclr_ref, sclc_ref, thr_ref, thr_c_ref=None,
                  *, kind, n_rows, n_cols, tm, tn, inv_two_sigma_sq,
-                 adaptive, truncate):
+                 adaptive, truncate, truncate_col=False):
     """Regenerate the masked affinity tile — the shared body of both
-    streaming kernels, matching kernels/affinity.py op-for-op."""
+    streaming kernels (and their block-sparse variants, which pass the
+    gathered col-block id as ``j``), matching kernels/affinity.py
+    op-for-op. ``thr_c_ref`` applies the COLUMN's own row threshold
+    (the transpose mask used by the Aᵀ reachability product — exact
+    because the score transform is symmetric in its arguments)."""
     xr = xr_ref[...]                   # (TM, m) row slab
     xc = xc_ref[...]                   # (TN, m) col slab
     dot = jax.lax.dot_general(
@@ -81,6 +85,8 @@ def _masked_tile(i, j, off_ref, xr_ref, xc_ref, sqr_ref, sqc_ref,
                        n_rows=n_rows, n_cols=n_cols)
     if truncate:
         valid = valid & (a >= thr_ref[...])              # (TM, 1) broadcast
+    if truncate_col:
+        valid = valid & (a >= thr_c_ref[...].T)          # (1, TN) broadcast
     return jnp.where(valid, a, 0.0)
 
 
@@ -89,22 +95,23 @@ def _streaming_kernel(
     *refs,
     kind: str, n_rows: int, n_cols: int, tm: int, tn: int,
     inv_two_sigma_sq: float, nj: int, normalize: bool,
-    adaptive: bool, truncate: bool,
+    adaptive: bool, truncate: bool, truncate_col: bool,
 ):
     refs = list(refs)
     u_ref = refs[-1]
     xr_ref, xc_ref, sqr_ref, sqc_ref, v_ref, d_ref = refs[:6]
-    sclr_ref, sclc_ref, thr_ref = unpack_policy_refs(
-        refs[6:-1], adaptive, truncate)
+    sclr_ref, sclc_ref, thr_ref, thr_c_ref = unpack_policy_refs(
+        refs[6:-1], adaptive, truncate, truncate_col)
 
     i = pl.program_id(0)
     j = pl.program_id(1)
 
     a = _masked_tile(i, j, off_ref, xr_ref, xc_ref, sqr_ref, sqc_ref,
-                     sclr_ref, sclc_ref, thr_ref,
+                     sclr_ref, sclc_ref, thr_ref, thr_c_ref,
                      kind=kind, n_rows=n_rows, n_cols=n_cols, tm=tm, tn=tn,
                      inv_two_sigma_sq=inv_two_sigma_sq,
-                     adaptive=adaptive, truncate=truncate)
+                     adaptive=adaptive, truncate=truncate,
+                     truncate_col=truncate_col)
 
     v = v_ref[...]                     # (TN, r) slice of V
     partial = jax.lax.dot_general(
@@ -154,6 +161,7 @@ def affinity_matmat(
     scale_r: jax.Array | None = None,
     scale_c: jax.Array | None = None,
     thr: jax.Array | None = None,
+    thr_c: jax.Array | None = None,
 ) -> jax.Array:
     """U = (A @ V) / d with A regenerated tile-by-tile from features.
 
@@ -164,13 +172,17 @@ def affinity_matmat(
     L2-row-normalized features; for ``rbf`` pass raw features plus the
     bandwidth ``sigma``. ``scale_r``/``scale_c`` (R,)/(C,) switch rbf to
     adaptive local scaling; ``thr`` (R,) truncates rows below their pass-1
-    threshold (DESIGN.md §11). No (R, C) array is ever allocated — peak
-    memory is O((R + C)·m + (R + C)·r).
+    threshold (DESIGN.md §11). ``thr_c`` (C,) instead applies each COLUMN's
+    own threshold — Aᵀ[stripe] @ V for the symmetrized reachability probe
+    (score symmetry makes the column-side mask the exact transpose
+    pattern). No (R, C) array is ever allocated — peak memory is
+    O((R + C)·m + (R + C)·r).
     """
     if xc is None:
         xc = x
     adaptive = scale_r is not None
     truncate = thr is not None
+    truncate_col = thr_c is not None
     if adaptive and (kind != "rbf" or scale_c is None):
         raise ValueError("adaptive scaling needs kind='rbf' and both "
                          "scale_r and scale_c")
@@ -196,7 +208,7 @@ def affinity_matmat(
         kind=kind, n_rows=n_rows, n_cols=n_cols, tm=tm, tn=tn,
         inv_two_sigma_sq=float(1.0 / (2.0 * sigma * sigma)),
         nj=grid[1], normalize=normalize,
-        adaptive=adaptive, truncate=truncate,
+        adaptive=adaptive, truncate=truncate, truncate_col=truncate_col,
     )
     in_specs = [
         pl.BlockSpec((1, 2), lambda i, j: (0, 0),
@@ -210,7 +222,7 @@ def affinity_matmat(
     ]
     operands = [off, xr32, xc32, sqr, sqc, vp, dp[:, None]]
     pol_specs, pol_ops = policy_specs_and_operands(
-        scale_r, scale_c, thr, tm=tm, tn=tn, rp=rp, cp=cp,
+        scale_r, scale_c, thr, thr_c, tm=tm, tn=tn, rp=rp, cp=cp,
         n_rows=n_rows, n_cols=n_cols)
     u = pl.pallas_call(
         kernel,
@@ -232,7 +244,7 @@ def _streaming_degree_kernel(
     refs = list(refs)
     d_ref = refs[-1]
     xr_ref, xc_ref, sqr_ref, sqc_ref = refs[:4]
-    sclr_ref, sclc_ref, thr_ref = unpack_policy_refs(
+    sclr_ref, sclc_ref, thr_ref, _ = unpack_policy_refs(
         refs[4:-1], adaptive, truncate)
 
     i = pl.program_id(0)

@@ -1,0 +1,371 @@
+"""Block-CSR stripe sweeps + fused one-pass build (ISSUE 8 tentpole).
+
+Four layers, each pinned bitwise against the dense-storage truncated path
+it shadows (the DESIGN.md §13 discipline — skipped steps gather DEAD
+all-zero blocks, so the accumulation ORDER and step program are identical
+to the dense grid's and the results match bit for bit):
+
+  TestBlockPlan       the (counts, col_idx, max_b) plan itself: roundtrip
+                      through plan_to_live, and the property that the plan
+                      covers EXACTLY the blocks the top-k mask keeps
+  TestKernelParity    each block-sparse kernel vs its dense-grid twin at
+                      matching pinned tiles, r ∈ {1, 4}, plus the
+                      reference-oracle agreement
+  TestFusedBuild      fused_affinity_build (one pass over the feature
+                      blocks) vs the two-pass build-then-rebuild: a, d,
+                      and the per-row thresholds all bitwise
+  TestEnginePath      run_gpic(block_sparse=True) vs the dense-storage
+                      path per engine — labels, embeddings, n_iter_cols —
+                      including the degenerate single-column-block grid
+                      that must fall back to the dense kernel, and the
+                      matrix-free rejection of truncated specs
+
+plus the 8-device mesh parity case (slow): sharded block-sparse ==
+sharded dense-storage bitwise for both engines at tile=32 (stage grids
+2x2, so the ring's stacked liveness plan is genuinely exercised).
+
+Data is CLUSTER-SORTED blobs so kNN truncation kills whole off-diagonal
+tile blocks — the plan must actually skip steps for these tests to mean
+anything (asserted, not assumed).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import textwrap
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import run_in_mesh_subprocess
+from repro.core import AffinitySpec, GPICConfig, run_gpic
+from repro.core.affinity import block_plan, dense_block_live, plan_to_live
+from repro.core.graph import affinity_stats, fused_affinity_build
+from repro.kernels import ops
+
+KNN = AffinitySpec(kind="rbf", sigma=0.5, knn_k=10)
+ADA_KNN = AffinitySpec(kind="rbf", bandwidth="adaptive", scale_k=5,
+                       knn_k=10)
+
+
+def _blobs(n=192, m=8, k=3, seed=0):
+    """Cluster-sorted well-separated blobs: rows of the same cluster are
+    contiguous, so truncation leaves dead off-diagonal tile blocks."""
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(-20.0, 20.0, (k, m))
+    x = np.concatenate([
+        centers[i] + 0.5 * rng.standard_normal((n // k, m))
+        for i in range(k)
+    ])
+    return jnp.asarray(x, jnp.float32)
+
+
+def _built(spec, n=192, tm=64, tn=64):
+    """Dense-storage truncated (a, d) + pass-1 stats on pinned tiles."""
+    x = _blobs(n)
+    scale, thr = affinity_stats(x, spec)
+    a, d = ops.affinity_and_degree(x, spec=spec, scale_r=scale,
+                                   scale_c=scale, thr=thr, tm=tm, tn=tn)
+    return x, scale, thr, a, d
+
+
+# ---------------------------------------------------------------------------
+# the plan
+# ---------------------------------------------------------------------------
+
+
+class TestBlockPlan:
+    def test_roundtrip_handmade(self):
+        live = jnp.asarray([[1, 0, 1, 0],
+                            [0, 0, 0, 0],
+                            [1, 1, 1, 1]], jnp.int32)
+        counts, col_idx, max_b = block_plan(live)
+        assert counts.tolist() == [2, 0, 4]
+        assert int(max_b) == 4
+        # ascending live ids first; the dead tail stays in-range
+        assert col_idx[0, :2].tolist() == [0, 2]
+        assert sorted(col_idx[1].tolist()) == [0, 1, 2, 3]
+        np.testing.assert_array_equal(
+            np.asarray(plan_to_live(counts, col_idx)),
+            np.asarray(live) != 0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 6), st.integers(1, 8), st.integers(0, 2**31 - 1))
+    def test_roundtrip_property(self, n_i, n_j, seed):
+        live = np.random.RandomState(seed).rand(n_i, n_j) < 0.4
+        counts, col_idx, max_b = block_plan(jnp.asarray(live))
+        np.testing.assert_array_equal(np.asarray(plan_to_live(counts,
+                                                              col_idx)),
+                                      live)
+        np.testing.assert_array_equal(np.asarray(counts),
+                                      live.sum(axis=1))
+        assert int(max_b) == max(int(live.sum(axis=1).max()), 1)
+        ci = np.asarray(col_idx)
+        for i in range(n_i):
+            # every row is a permutation of the block ids (dead tail is
+            # still valid for the DMA index maps) with live ids ascending
+            assert sorted(ci[i].tolist()) == list(range(n_j))
+            lead = ci[i, :live[i].sum()]
+            assert (lead == np.sort(np.where(live[i])[0])).all()
+
+    def test_plan_covers_exactly_the_topk_mask(self):
+        """Satellite 4 property: the plan's live blocks are EXACTLY the
+        tiles holding entries the top-k mask kept — no survivor outside a
+        live block, no live block without a survivor."""
+        tm = tn = 64
+        _, _, _, a, _ = _built(KNN, tm=tm, tn=tn)
+        an = np.asarray(a)
+        live = np.asarray(dense_block_live(a, tm, tn))
+        counts, col_idx, _ = block_plan(jnp.asarray(live))
+        planned = np.asarray(plan_to_live(counts, col_idx))
+        for i in range(live.shape[0]):
+            for j in range(live.shape[1]):
+                tile_nnz = (an[i * tm:(i + 1) * tm,
+                               j * tn:(j + 1) * tn] != 0).any()
+                assert bool(planned[i, j]) == bool(tile_nnz), (i, j)
+
+
+# ---------------------------------------------------------------------------
+# kernel-level bitwise parity vs the dense-grid twins
+# ---------------------------------------------------------------------------
+
+
+class TestKernelParity:
+    def _plan(self, a, tm, tn):
+        live = dense_block_live(a, tm, tn)
+        counts, col_idx, max_b = block_plan(live)
+        # the data must produce real sparsity or these tests test nothing
+        assert int(max_b) < live.shape[1], "no dead blocks — fixture broken"
+        return counts, col_idx, max_b
+
+    @pytest.mark.parametrize("r", [1, 4])
+    def test_matmat_bitwise(self, r):
+        tm = tn = 64
+        _, _, _, a, d = _built(KNN, tm=tm, tn=tn)
+        counts, col_idx, max_b = self._plan(a, tm, tn)
+        v = jax.random.uniform(jax.random.key(r), (a.shape[1], r),
+                               jnp.float32)
+        got = ops.block_sparse_matmat(a, v, d, counts, col_idx, max_b,
+                                      tm=tm, tn=tn)
+        want = ops.degree_normalized_matmat(a, v, d, tm=tm, tn=tn)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("spec", [KNN, ADA_KNN], ids=["knn", "ada+knn"])
+    @pytest.mark.parametrize("r", [1, 4])
+    def test_streaming_matmat_bitwise(self, r, spec):
+        tm = tn = 64
+        x, scale, thr, a, d = _built(spec, tm=tm, tn=tn)
+        counts, col_idx, max_b = self._plan(a, tm, tn)
+        v = jax.random.uniform(jax.random.key(r), (x.shape[0], r),
+                               jnp.float32)
+        got = ops.block_sparse_streaming_matmat(
+            x, v, d, counts=counts, col_idx=col_idx, max_b=max_b,
+            spec=spec, scale_r=scale, scale_c=scale, thr=thr, tm=tm, tn=tn)
+        want = ops.streaming_matmat(x, v, d, spec=spec, scale_r=scale,
+                                    scale_c=scale, thr=thr, tm=tm, tn=tn)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_streaming_degree_bitwise(self):
+        tm = tn = 64
+        x, scale, thr, a, _ = _built(KNN, tm=tm, tn=tn)
+        counts, col_idx, max_b = self._plan(a, tm, tn)
+        got = ops.block_sparse_streaming_degree(
+            x, counts=counts, col_idx=col_idx, max_b=max_b, spec=KNN,
+            scale_r=scale, scale_c=scale, thr=thr, tm=tm, tn=tn)
+        want = ops.streaming_degree(x, spec=KNN, scale_r=scale,
+                                    scale_c=scale, thr=thr, tm=tm, tn=tn)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_liveness_matches_stored_matrix(self):
+        """The A-free liveness pass sees the same live map the explicit
+        engine reads off the matrix it stored."""
+        tm = tn = 64
+        x, scale, thr, a, _ = _built(KNN, tm=tm, tn=tn)
+        got = ops.block_liveness(x, spec=KNN, scale_r=scale, scale_c=scale,
+                                 thr=thr, tm=tm, tn=tn)
+        np.testing.assert_array_equal(
+            np.asarray(got) != 0, np.asarray(dense_block_live(a, tm, tn)))
+
+    def test_reference_oracles_agree(self):
+        """force_reference=True routes to kernels/ref.py — same math,
+        unfused HLO; the fallback path must agree with the kernels."""
+        tm = tn = 64
+        x, scale, thr, a, d = _built(KNN, tm=tm, tn=tn)
+        counts, col_idx, max_b = self._plan(a, tm, tn)
+        v = jax.random.uniform(jax.random.key(0), (x.shape[0], 2),
+                               jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(ops.block_sparse_matmat(
+                a, v, d, counts, col_idx, max_b, tm=tm, tn=tn,
+                force_reference=True)),
+            np.asarray(ops.block_sparse_matmat(
+                a, v, d, counts, col_idx, max_b, tm=tm, tn=tn)),
+            rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(
+            np.asarray(ops.block_sparse_streaming_matmat(
+                x, v, d, counts=counts, col_idx=col_idx, max_b=max_b,
+                spec=KNN, scale_r=scale, scale_c=scale, thr=thr,
+                tm=tm, tn=tn, force_reference=True)),
+            np.asarray(ops.block_sparse_streaming_matmat(
+                x, v, d, counts=counts, col_idx=col_idx, max_b=max_b,
+                spec=KNN, scale_r=scale, scale_c=scale, thr=thr,
+                tm=tm, tn=tn)),
+            rtol=1e-6, atol=1e-7)
+        np.testing.assert_array_equal(
+            np.asarray(ops.block_liveness(
+                x, spec=KNN, scale_r=scale, scale_c=scale, thr=thr,
+                tm=tm, tn=tn, force_reference=True)) != 0,
+            np.asarray(ops.block_liveness(
+                x, spec=KNN, scale_r=scale, scale_c=scale, thr=thr,
+                tm=tm, tn=tn)) != 0)
+
+
+# ---------------------------------------------------------------------------
+# the fused one-pass build
+# ---------------------------------------------------------------------------
+
+
+class TestFusedBuild:
+    @pytest.mark.parametrize("spec", [KNN, ADA_KNN], ids=["knn", "ada+knn"])
+    def test_matches_two_pass_bitwise(self, spec):
+        tm = tn = 64
+        x = _blobs()
+        scale, thr2 = affinity_stats(x, spec)
+        a2, d2 = ops.affinity_and_degree(x, spec=spec, scale_r=scale,
+                                         scale_c=scale, thr=thr2,
+                                         tm=tm, tn=tn)
+        a1, d1, thr1 = fused_affinity_build(x, spec=spec, scale_r=scale,
+                                            scale_c=scale, tm=tm, tn=tn)
+        np.testing.assert_array_equal(np.asarray(thr1), np.asarray(thr2))
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+        np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+    def test_bf16_storage_matches(self):
+        tm = tn = 64
+        x = _blobs()
+        scale, thr2 = affinity_stats(x, KNN)
+        a2, d2 = ops.affinity_and_degree(x, spec=KNN, scale_r=scale,
+                                         scale_c=scale, thr=thr2,
+                                         tm=tm, tn=tn,
+                                         out_dtype=jnp.bfloat16)
+        a1, d1, _ = fused_affinity_build(x, spec=KNN, scale_r=scale,
+                                         scale_c=scale, tm=tm, tn=tn,
+                                         a_dtype=jnp.bfloat16)
+        assert a1.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(a1, jnp.float32), np.asarray(a2, jnp.float32))
+        np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+# ---------------------------------------------------------------------------
+# engine-level: run_gpic block_sparse=True vs the dense-storage path
+# ---------------------------------------------------------------------------
+
+
+def _bitwise(res_a, res_b, ctx):
+    np.testing.assert_array_equal(np.asarray(res_a.labels),
+                                  np.asarray(res_b.labels), err_msg=str(ctx))
+    np.testing.assert_array_equal(np.asarray(res_a.embeddings),
+                                  np.asarray(res_b.embeddings),
+                                  err_msg=str(ctx))
+    np.testing.assert_array_equal(np.asarray(res_a.n_iter_cols),
+                                  np.asarray(res_b.n_iter_cols),
+                                  err_msg=str(ctx))
+
+
+class TestEnginePath:
+    @pytest.mark.parametrize("engine", ["explicit", "streaming"])
+    @pytest.mark.parametrize("r", [1, 4])
+    def test_block_sparse_is_bitwise_vs_dense_storage(self, engine, r):
+        x = _blobs()
+        cfg = GPICConfig(engine=engine, affinity=ADA_KNN, n_vectors=r,
+                         max_iter=60, tile=64)
+        key = jax.random.key(1)
+        bs = run_gpic(x, 3, cfg, key=key)
+        dn = run_gpic(x, 3, cfg.with_(block_sparse=False), key=key)
+        _bitwise(bs, dn, (engine, r))
+        assert int(bs.health.n_components) == int(dn.health.n_components)
+
+    def test_degenerate_grid_falls_back_bitwise(self):
+        """tile >= n gives a single column block: nothing to skip, and the
+        operator must keep the dense-grid kernel (the guard that pins the
+        r=1 fusion form — DESIGN.md §13)."""
+        x = _blobs()
+        cfg = GPICConfig(engine="streaming", affinity=KNN, n_vectors=1,
+                         max_iter=60, tile=256)
+        key = jax.random.key(1)
+        _bitwise(run_gpic(x, 3, cfg, key=key),
+                 run_gpic(x, 3, cfg.with_(block_sparse=False), key=key),
+                 "degenerate")
+
+    def test_matrix_free_rejects_truncated_spec(self):
+        x = _blobs()
+        for bs in (True, False):
+            with pytest.raises(ValueError, match="factorable"):
+                run_gpic(x, 3, GPICConfig(engine="matrix_free",
+                                          affinity=KNN, block_sparse=bs),
+                         key=jax.random.key(1))
+
+
+# ---------------------------------------------------------------------------
+# 8-device mesh parity (satellite 4)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_sharded_block_sparse_parity():
+    """Sharded block-sparse vs sharded dense-storage for both engines x
+    r in {1, 4} at tile=32 — n_loc=64 gives every ring stage a 2x2 block
+    grid, so the stacked liveness plan and per-stage gathers run for real.
+
+    Both engines are asserted fully BITWISE against their dense-storage
+    twins: labels, embeddings, n_iter_cols. This is also the regression
+    net for the argsort-under-shard_map miscompile (the sort-free
+    block_plan, core/affinity.py): with the sorted plan, every device
+    whose live blocks sit off the leading diagonal read dead stripe
+    tiles and the power iteration collapsed onto one component. The
+    matrix-free engine's truncated-spec rejection holds on the mesh
+    too."""
+    out = run_in_mesh_subprocess(textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import AffinitySpec, GPICConfig, run_gpic
+        from repro.core.distributed import shard_points
+
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        centers = rng.uniform(-20.0, 20.0, (4, 8))
+        x = np.concatenate([
+            centers[i] + 0.5 * rng.standard_normal((128, 8))
+            for i in range(4)
+        ]).astype(np.float32)
+        xs = shard_points(x, mesh, "data")
+        spec = AffinitySpec(kind="rbf", bandwidth="adaptive", scale_k=5,
+                            knn_k=10)
+        for engine in ("explicit", "streaming"):
+            for r in (1, 4):
+                cfg = GPICConfig(engine=engine, affinity=spec, n_vectors=r,
+                                 max_iter=60, tile=32, mesh=mesh)
+                key = jax.random.key(1)
+                bs = run_gpic(xs, 4, cfg, key=key)
+                dn = run_gpic(xs, 4, cfg.with_(block_sparse=False), key=key)
+                assert (np.asarray(bs.labels)
+                        == np.asarray(dn.labels)).all(), (engine, r)
+                assert (np.asarray(bs.embeddings)
+                        == np.asarray(dn.embeddings)).all(), (engine, r)
+                assert (np.asarray(bs.n_iter_cols)
+                        == np.asarray(dn.n_iter_cols)).all(), (engine, r)
+                assert (int(bs.health.n_components)
+                        == int(dn.health.n_components) == 4), (engine, r)
+                assert (int(bs.health.isolated_rows)
+                        == int(dn.health.isolated_rows)), (engine, r)
+                print("OK", engine, "r=", r)
+        try:
+            run_gpic(xs, 4, GPICConfig(engine="matrix_free", affinity=spec,
+                                       mesh=mesh), key=jax.random.key(1))
+        except ValueError as e:
+            assert "factorable" in str(e)
+            print("OK matrix_free-rejects-knn")
+        """))
+    assert out.count("OK") == 5

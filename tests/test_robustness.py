@@ -15,7 +15,13 @@ class of the matrix:
                          isolated
   disconnected graphs    on-device component probe on truncated specs
   dead/stalled columns   COL_* latches in the one convergence loop
-  kernel failures        per-op reference fallback + health note
+  kernel failures        per-op reference fallback + health note, plus
+                         the retry_on_fallback re-run contract (PR 8)
+  directed probe bias    symmetrized reachability regression: asymmetric
+                         kNN edges must not split weakly-attached rows
+                         into phantom components (PR 8)
+  truncated residuals    subspace_residual and op.degree under kNN
+                         truncation (post-mask degrees, PR 8)
   corrupted ring stage   sharded streaming fault hook (mesh subprocess)
 
 The mesh tests run in a subprocess with 8 host devices (same harness as
@@ -366,6 +372,145 @@ class TestKernelFallback:
             assert bool(jnp.all(got == want))
         finally:
             self._clean()
+
+
+# ---------------------------------------------------------------------------
+# Symmetrized component probe (PR-8 bugfix): a kNN graph is DIRECTED —
+# row i keeping j among its top-k does not mean j keeps i. The probe's
+# reachability must expand through A and A^T; following A alone splits
+# weakly-attached rows into phantom components.
+# ---------------------------------------------------------------------------
+
+
+class TestSymmetrizedComponentProbe:
+    def _asymmetric_two_blobs(self):
+        # an outlier at (2.5, 0) picks blob-a points as ITS 3 neighbours,
+        # but no blob-a point keeps the outlier: every A-edge touching the
+        # outlier is one-directional, and the directed expansion that
+        # seeds on it reaches rows whose own rows never link back
+        rs = np.random.RandomState(0)
+        blob_a = rs.randn(31, 2).astype(np.float32) * 0.3
+        blob_b = rs.randn(32, 2).astype(np.float32) * 0.3 + 50.0
+        x = np.concatenate(
+            [np.array([[2.5, 0.0]], np.float32), blob_a, blob_b])
+        return x, AffinitySpec(kind="rbf", sigma=1.0, knn_k=3)
+
+    def test_directed_probe_overcounts_symmetrized_is_exact(self):
+        import dataclasses
+
+        from repro.core.health import graph_component_probe
+        from repro.core.operators import explicit_operator
+
+        x, spec = self._asymmetric_two_blobs()
+        op = explicit_operator(jnp.asarray(x), spec=spec, tile=32)
+        # truncated operators bind matmat_t; stripping it reproduces the
+        # pre-fix directed expansion
+        directed = dataclasses.replace(op, matmat_t=None)
+        n_directed, _ = graph_component_probe(directed, x.shape[0])
+        n_sym, comp = graph_component_probe(op, x.shape[0])
+        assert int(n_directed) == 7     # phantom components
+        assert int(n_sym) == 2          # the two blobs
+        comp = np.asarray(comp)
+        assert (comp[:32] == comp[0]).all()
+        assert (comp[32:] == comp[32]).all()
+        assert comp[0] != comp[32]
+
+    def test_end_to_end_probe_is_symmetrized(self):
+        x, spec = self._asymmetric_two_blobs()
+        res = run_gpic(x, 2, GPICConfig(affinity=spec, tile=32))
+        assert int(res.health.n_components) == 2
+
+
+# ---------------------------------------------------------------------------
+# retry_on_fallback (PR-8 bugfix): a mid-run kernel fallback leaves a
+# MIXED kernel/reference trajectory; opting in re-runs the whole pipeline
+# on the reference oracles and upgrades the note
+# ---------------------------------------------------------------------------
+
+
+class TestRetryOnFallback:
+    def _clean(self):
+        ops.reset_kernel_fallbacks()
+        jax.clear_caches()
+
+    def _cfg(self, **kw):
+        return GPICConfig(embedding="orthogonal", n_vectors=2, **kw)
+
+    def test_retry_upgrades_note_and_matches_reference(self):
+        self._clean()
+        try:
+            with ops.forced_kernel_failure("gram"):
+                res = run_gpic(_blobs(), 3,
+                               self._cfg(retry_on_fallback=True))
+            assert "kernel_fallback_retried:gram" in res.health.notes
+            assert "kernel_fallback:gram" not in res.health.notes
+            self._clean()
+            want = run_gpic(_blobs(), 3, self._cfg(use_pallas=False))
+            # the retried result IS the all-reference run, bitwise
+            np.testing.assert_array_equal(np.asarray(res.labels),
+                                          np.asarray(want.labels))
+            np.testing.assert_array_equal(np.asarray(res.embeddings),
+                                          np.asarray(want.embeddings))
+        finally:
+            self._clean()
+
+    def test_default_keeps_mixed_trajectory_note(self):
+        self._clean()
+        try:
+            with ops.forced_kernel_failure("gram"):
+                res = run_gpic(_blobs(), 3, self._cfg())
+            assert "kernel_fallback:gram" in res.health.notes
+            assert not any("retried" in n for n in res.health.notes)
+        finally:
+            self._clean()
+
+
+# ---------------------------------------------------------------------------
+# subspace_residual under truncation (PR-8 bugfix): the residual's W must
+# be the POST-MASK operator — degrees from the surviving entries only —
+# so the residual_tol rule composes with knn_k specs
+# ---------------------------------------------------------------------------
+
+
+class TestResidualUnderTruncation:
+    def test_truncated_operator_degrees_are_post_mask(self):
+        from repro.core.operators import explicit_operator
+
+        x = _blobs(96, k=3)
+        sigma, kk = 0.5, 8
+        op = explicit_operator(
+            jnp.asarray(x), spec=AffinitySpec(kind="rbf", sigma=sigma,
+                                              knn_k=kk), tile=32)
+        d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+        a = np.exp(-d2 / (2 * sigma * sigma)).astype(np.float32)
+        np.fill_diagonal(a, 0.0)
+        thr = np.sort(a, axis=1)[:, -kk]
+        a_masked = np.where(a >= thr[:, None], a, 0.0)
+        deg = np.asarray(op.degree)
+        np.testing.assert_allclose(deg, a_masked.sum(1), rtol=1e-4)
+        # and they are NOT the dense row sums — the pre-fix behaviour
+        assert not np.allclose(deg, a.sum(1), rtol=1e-3)
+
+    def test_residual_tol_composes_with_knn_spec(self):
+        # the missing regression: residual_tol x knn_k ran to max_iter
+        # before the truncated-residual fix. Modelled on
+        # TestSubspaceResidualStopping (test_affinity_spec.py): col 1
+        # stops on subspace convergence, col 0 stays pinned bitwise.
+        from repro.data.synthetic import three_circles
+
+        x, _ = three_circles(480, seed=0)
+        spec = AffinitySpec(kind="rbf", sigma=0.3, knn_k=30)
+        cfg = GPICConfig(affinity=spec, max_iter=400, n_vectors=2,
+                         embedding="orthogonal")
+        full = run_gpic(jnp.asarray(x), 3, cfg, key=jax.random.key(1))
+        res = run_gpic(jnp.asarray(x), 3, cfg.with_(residual_tol=1e-3),
+                       key=jax.random.key(1))
+        assert int(full.n_iter_cols[1]) == 400
+        assert int(res.n_iter_cols[1]) < 200
+        assert bool(res.converged_cols.all())
+        assert int(res.n_iter_cols[0]) == int(full.n_iter_cols[0])
+        np.testing.assert_array_equal(np.asarray(res.embedding),
+                                      np.asarray(full.embedding))
 
 
 # ---------------------------------------------------------------------------
