@@ -27,6 +27,14 @@ Sections:
                                     regression that lets garbage escape
                                     fails the benchmark run, not just the
                                     test suite
+  robustness/checkpoint_overhead    the resumable supervisor with async
+                                    snapshots every 25 sweeps vs the
+                                    monolithic run (PR 9) — ASSERTS the
+                                    supervised run costs at most
+                                    CHECKPOINT_BUDGET_PCT more and returns
+                                    the monolithic labels bitwise (same
+                                    paired-interleaved timing as the guard
+                                    rows)
 
 Run:  PYTHONPATH=src python -m benchmarks.run --only robustness
 """
@@ -56,6 +64,10 @@ from .common import csv_row, time_fn
 
 #: guard-overhead acceptance ceiling, percent (ISSUE 6)
 GUARD_BUDGET_PCT = 2.0
+
+#: resumable-supervisor overhead ceiling at checkpoint_every=25, percent
+#: (ISSUE 9: segments + async snapshots against the monolithic loop)
+CHECKPOINT_BUDGET_PCT = 5.0
 
 
 def _paired_overhead_pct(fn_on, fn_off, v0, *, pairs=11):
@@ -204,12 +216,59 @@ def _fault_matrix_rows(n, rows):
         rows.append(csv_row(f"robustness/fault/{tag}", t, outcome))
 
 
+def _checkpoint_overhead_rows(n, rows):
+    """Price the PR-9 resumable supervisor: segmented sweeps + async
+    snapshots every 25 sweeps vs the monolithic run_gpic call. eps_scale
+    pins the loop at max_iter so both paths run the same 50 sweeps and
+    the supervised path crosses a snapshot boundary."""
+    import os
+    import shutil
+    import tempfile
+
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(n, 2)),
+                    jnp.float32)
+    root = tempfile.mkdtemp(prefix="gpic_ckpt_bench_")
+    cfg = GPICConfig(max_iter=50, eps_scale=1e-9)
+    ck = cfg.with_(checkpoint_every=25, ckpt_dir=os.path.join(root, "ck"))
+
+    def run_plain(_):
+        return run_gpic(x, 3, cfg).labels
+
+    def run_ckpt(_):
+        # a fresh dir per call: stale snapshots would short-circuit the
+        # loop via resume and time only the finalize
+        shutil.rmtree(ck.ckpt_dir, ignore_errors=True)
+        return run_gpic(x, 3, ck).labels
+
+    try:
+        np.testing.assert_array_equal(
+            np.asarray(run_ckpt(None)), np.asarray(run_plain(None)),
+            err_msg="supervised run diverged from the monolithic labels "
+                    "(resume parity must be bitwise)")
+        for attempt in range(3):
+            pct, t_on, t_off = _paired_overhead_pct(run_ckpt, run_plain,
+                                                    None)
+            if pct <= CHECKPOINT_BUDGET_PCT:
+                break
+        assert pct <= CHECKPOINT_BUDGET_PCT, (
+            f"checkpointing every 25 sweeps costs {pct:.2f}% "
+            f"(budget {CHECKPOINT_BUDGET_PCT}%): {t_on * 1e6:.0f}us vs "
+            f"{t_off * 1e6:.0f}us")
+        rows.append(csv_row(
+            "robustness/checkpoint_overhead/every=25", t_on,
+            f"base_us={t_off * 1e6:.1f} overhead_pct={pct:.2f} "
+            f"budget_pct={CHECKPOINT_BUDGET_PCT} bitwise=1"))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
 def run(n=2048, fault_n=256):
     rows = []
     _guard_overhead_rows(n, rows)
     _frontdoor_row(n, rows)
     _probe_rows(fault_n, rows)
     _fault_matrix_rows(fault_n, rows)
+    _checkpoint_overhead_rows(fault_n * 4, rows)
     return rows
 
 

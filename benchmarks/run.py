@@ -4,7 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run            # quick set
     PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sizes
-    PYTHONPATH=src python -m benchmarks.run --json     # + BENCH_PR8.json
+    PYTHONPATH=src python -m benchmarks.run --json     # + BENCH_PR9.json
 
 ``--json [PATH]`` additionally writes a machine-readable perf snapshot
 (us/call per job row plus the engine sweep-count model) for CI diffing.
@@ -36,9 +36,9 @@ def main() -> None:
                     help="comma-separated subset: table1,table2,fig3,exp2,"
                          "roofline,multivec,distributed,quality,affinity,"
                          "robustness")
-    ap.add_argument("--json", nargs="?", const="BENCH_PR8.json", default=None,
+    ap.add_argument("--json", nargs="?", const="BENCH_PR9.json", default=None,
                     metavar="PATH",
-                    help="write a JSON perf snapshot (default BENCH_PR8.json)")
+                    help="write a JSON perf snapshot (default BENCH_PR9.json)")
     args = ap.parse_args()
 
     from . import (bench_affinity, bench_distributed, bench_exp2, bench_fig3,

@@ -52,13 +52,20 @@ from .health import HealthReport, count_bad_rows, graph_component_probe
 from .kmeans import kmeans
 from .operators import (
     _axis_tuple,
+    mesh_reductions,
     sharded_explicit_operator,
     sharded_matrix_free_operator,
     sharded_streaming_operator,
 )
 from .pic import PICResult, make_pic_result
 from .power import (
+    PowerCarry,
+    backfill_snapshots,
+    ensemble_embedding,
+    finalize_power_carry,
+    init_power_carry,
     init_power_vectors_local,
+    power_iteration_segment,
     random_start_vectors,
     run_power_embedding,
     standardize_columns,
@@ -68,6 +75,30 @@ from .power import (
 
 def _mesh_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
     return math.prod(mesh.shape[a] for a in axes)
+
+
+def _build_sharded_operator(x_loc, axes, mesh_size, engine, spec, *,
+                            a_dtype=jnp.float32, fold_shift=False, tile=None,
+                            use_pallas=True, block_sparse=True,
+                            inject_ring_fault=None):
+    """The ONE sharded operator construction (inside the shard_map body) —
+    shared by the monolithic entry points and the segmented (resumable)
+    ones so both trace the identical build (DESIGN.md §14)."""
+    if engine == "explicit":
+        return sharded_explicit_operator(
+            x_loc, axes=axes, spec=spec, a_dtype=a_dtype,
+            fold_shift=fold_shift, tile=tile, use_pallas=use_pallas,
+            block_sparse=block_sparse)
+    if engine == "streaming":
+        return sharded_streaming_operator(
+            x_loc, axes=axes, mesh_size=mesh_size, spec=spec,
+            tile=tile, use_pallas=use_pallas, block_sparse=block_sparse,
+            inject_fault=inject_ring_fault)
+    if engine == "matrix_free":
+        return sharded_matrix_free_operator(x_loc, axes=axes, spec=spec,
+                                            use_pallas=use_pallas)
+    raise ValueError(f"unknown engine {engine!r} "
+                     "(expected 'explicit' or 'streaming')")
 
 
 def _local_slice(idx, n_loc, arr):
@@ -195,20 +226,13 @@ def distributed_gpic(
     u0t = random_start_vectors(krand, n, n_vectors)
 
     def fn(x_loc, key, u0t):
-        if engine == "explicit":
-            op = sharded_explicit_operator(
-                x_loc, axes=axes, spec=spec, a_dtype=a_dtype,
-                fold_shift=fold_shift, tile=tile, use_pallas=use_pallas,
-                block_sparse=block_sparse)
-        elif engine == "streaming":
-            op = sharded_streaming_operator(
-                x_loc, axes=axes, mesh_size=mesh_size, spec=spec,
-                tile=tile, use_pallas=use_pallas,
-                block_sparse=block_sparse,
-                inject_fault=inject_ring_fault)
-        else:
+        if engine not in ("explicit", "streaming"):
             raise ValueError(f"unknown engine {engine!r} "
                              "(expected 'explicit' or 'streaming')")
+        op = _build_sharded_operator(
+            x_loc, axes, mesh_size, engine, spec, a_dtype=a_dtype,
+            fold_shift=fold_shift, tile=tile, use_pallas=use_pallas,
+            block_sparse=block_sparse, inject_ring_fault=inject_ring_fault)
         return _run_sharded(op, axes, key=key, u0t=u0t, k=k, eps=eps,
                             max_iter=max_iter, kmeans_iters=kmeans_iters,
                             n_total=n, embedding=embedding,
@@ -271,8 +295,8 @@ def distributed_gpic_matrix_free(
     u0t = random_start_vectors(krand, n, n_vectors)
 
     def fn(x_loc, key, u0t):
-        op = sharded_matrix_free_operator(x_loc, axes=axes, spec=spec,
-                                          use_pallas=use_pallas)
+        op = _build_sharded_operator(x_loc, axes, None, "matrix_free", spec,
+                                     use_pallas=use_pallas)
         # the sweep itself is jnp either way; the flag still governs k-means
         # (factorable specs are never truncated — the probe cannot arm)
         return _run_sharded(op, axes, key=key, u0t=u0t, k=k, eps=eps,
@@ -291,6 +315,216 @@ def distributed_gpic_matrix_free(
     )(x, kkm, u0t)
     labels, v, emb_full, t_cols, done, status, iso, n_comp, comp = out
     health = HealthReport(col_status=status, isolated_rows=iso,
+                          n_components=n_comp, components=comp)
+    return make_pic_result(labels, v, t_cols, done, embedding=embedding,
+                           embeddings=emb_full, health=health)
+
+
+# ---------------------------------------------------------------------------
+# Segmented (resumable) execution — the sharded engines in bounded pieces
+# ---------------------------------------------------------------------------
+#
+# The convergence carry threads THROUGH shard_map: the (n_loc, r) leaves
+# (v, delta, snaps) stay row-sharded on the mesh between segments, the
+# per-column stats replicate, and the supervisor (core/pipeline.py) sees
+# one global PowerCarry it can checkpoint. Restoring hands plain host
+# arrays back in; shard_map re-lays them out without changing a bit, so
+# the resumed trajectory is the uninterrupted one (DESIGN.md §14).
+
+
+def _carry_specs(axes) -> PowerCarry:
+    """PartitionSpecs of the carry pytree: row-block leaves sharded over
+    ``axes``, per-column stats replicated."""
+    row, rep = P(axes), P()
+    return PowerCarry(t=rep, v=row, delta=row, done=rep, t_cols=rep,
+                      snaps=row, status=rep, best=rep, since=rep)
+
+
+_SEG_STATICS = ("mesh", "shard_axes", "eps_scale", "engine", "affinity",
+                "a_dtype", "fold_shift", "tile", "use_pallas",
+                "block_sparse", "mode", "qr_every", "snapshot_iters",
+                "residual_tol", "inject_ring_fault")
+
+
+@functools.partial(jax.jit, static_argnames=_SEG_STATICS + ("n_vectors",))
+def distributed_gpic_segment_start(
+    x: jax.Array,
+    stop: jax.Array,
+    *,
+    key: jax.Array,
+    mesh: Mesh,
+    shard_axes: str | Sequence[str] = "data",
+    eps_scale: float = 1e-5,
+    engine: str = "explicit",
+    affinity: AffinitySpec,
+    a_dtype=jnp.float32,
+    fold_shift: bool = False,
+    tile: int | None = None,
+    use_pallas: bool = True,
+    block_sparse: bool = True,
+    n_vectors: int = 1,
+    mode: str = "pic",
+    qr_every: int = 1,
+    snapshot_iters: tuple = (),
+    residual_tol: float | None = None,
+    inject_ring_fault: tuple | None = None,
+):
+    """Seed the sharded sweep-0 carry (the monolithic seeding: replicated
+    random starts sliced per device, degree column normalized by the
+    global psum) and run the first bounded segment. ``key`` is the krand
+    half of the front door's split. Returns ``(carry, isolated_rows)``."""
+    axes = _axis_tuple(shard_axes)
+    n = x.shape[0]
+    eps = eps_scale / n
+    mesh_size = _mesh_size(mesh, axes)
+    u0t = random_start_vectors(key, n, n_vectors)
+
+    def fn(x_loc, u0t, stop):
+        op = _build_sharded_operator(
+            x_loc, axes, mesh_size, engine, affinity, a_dtype=a_dtype,
+            fold_shift=fold_shift, tile=tile, use_pallas=use_pallas,
+            block_sparse=block_sparse, inject_ring_fault=inject_ring_fault)
+        idx = jax.lax.axis_index(axes)
+        n_loc = op.degree.shape[0]
+        u0t_loc = _local_slice(idx, n_loc, u0t)
+        v0_loc = init_power_vectors_local(
+            op.degree, u0t_loc, sum_fn=op.sum, dtype=jnp.float32)
+        carry = init_power_carry(v0_loc, len(snapshot_iters))
+        carry = power_iteration_segment(
+            op, carry, eps, stop, mode=mode, qr_every=qr_every,
+            snapshot_iters=snapshot_iters, residual_tol=residual_tol)
+        iso = count_bad_rows(op.degree, sum_fn=op.sum)
+        return carry, iso
+
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(axes), P(), P()),
+        out_specs=(_carry_specs(axes), P()),
+        check_rep=False,
+    )(x, u0t, stop)
+
+
+@functools.partial(jax.jit, static_argnames=_SEG_STATICS)
+def distributed_gpic_segment(
+    x: jax.Array,
+    carry: PowerCarry,
+    stop: jax.Array,
+    *,
+    mesh: Mesh,
+    shard_axes: str | Sequence[str] = "data",
+    eps_scale: float = 1e-5,
+    engine: str = "explicit",
+    affinity: AffinitySpec,
+    a_dtype=jnp.float32,
+    fold_shift: bool = False,
+    tile: int | None = None,
+    use_pallas: bool = True,
+    block_sparse: bool = True,
+    mode: str = "pic",
+    qr_every: int = 1,
+    snapshot_iters: tuple = (),
+    residual_tol: float | None = None,
+    inject_ring_fault: tuple | None = None,
+) -> PowerCarry:
+    """Advance a (possibly restored) carry by one bounded segment on the
+    mesh — the operator is rebuilt inside shard_map from the row-sharded
+    features, and the carry's row blocks stay sharded throughout."""
+    axes = _axis_tuple(shard_axes)
+    eps = eps_scale / x.shape[0]
+    mesh_size = _mesh_size(mesh, axes)
+
+    def fn(x_loc, carry_loc, stop):
+        op = _build_sharded_operator(
+            x_loc, axes, mesh_size, engine, affinity, a_dtype=a_dtype,
+            fold_shift=fold_shift, tile=tile, use_pallas=use_pallas,
+            block_sparse=block_sparse, inject_ring_fault=inject_ring_fault)
+        return power_iteration_segment(
+            op, carry_loc, eps, stop, mode=mode, qr_every=qr_every,
+            snapshot_iters=snapshot_iters, residual_tol=residual_tol)
+
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(axes), _carry_specs(axes), P()),
+        out_specs=_carry_specs(axes),
+        check_rep=False,
+    )(x, carry, stop)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "mesh", "shard_axes", "kmeans_iters", "engine", "affinity",
+    "a_dtype", "fold_shift", "tile", "use_pallas", "block_sparse",
+    "embedding", "snapshot_iters", "probe_components"))
+def distributed_gpic_segment_finalize(
+    x: jax.Array,
+    carry: PowerCarry,
+    iso: jax.Array,
+    k: int,
+    *,
+    key: jax.Array,
+    mesh: Mesh,
+    shard_axes: str | Sequence[str] = "data",
+    kmeans_iters: int = 25,
+    engine: str = "explicit",
+    affinity: AffinitySpec,
+    a_dtype=jnp.float32,
+    fold_shift: bool = False,
+    tile: int | None = None,
+    use_pallas: bool = True,
+    block_sparse: bool = True,
+    embedding: str = "pic",
+    snapshot_iters: tuple = (),
+    probe_components: bool = True,
+) -> PICResult:
+    """Close a finished sharded carry into the monolithic run's PICResult:
+    the ``_run_sharded`` tail — gather once, standardize, replicated
+    k-means (``key`` is the kkm half of the split), the component probe
+    when it arms — run inside shard_map with the identical reduction
+    bindings."""
+    axes = _axis_tuple(shard_axes)
+    n = x.shape[0]
+    mesh_size = _mesh_size(mesh, axes)
+    probe = probe_components and affinity.truncated
+
+    def fn(x_loc, carry_loc, key):
+        _, _, gather = mesh_reductions(axes)
+        t, v_loc, t_cols, done, snaps_loc, status = finalize_power_carry(
+            carry_loc)
+        if embedding == "ensemble":
+            snaps_loc = backfill_snapshots(snaps_loc, v_loc, t,
+                                           snapshot_iters)
+            emb_loc = ensemble_embedding(snaps_loc)
+        else:
+            emb_loc = v_loc
+        emb_full = gather(emb_loc)                  # once, after the loop
+        v_full = emb_full if emb_loc is v_loc else gather(v_loc)
+        emb = standardize_columns(emb_full)
+        labels, _ = kmeans(key, emb, k, iters=kmeans_iters,
+                           force_reference=not use_pallas)
+        if probe:
+            op = _build_sharded_operator(
+                x_loc, axes, mesh_size, engine, affinity, a_dtype=a_dtype,
+                fold_shift=fold_shift, tile=tile, use_pallas=use_pallas,
+                block_sparse=block_sparse)
+            idx = jax.lax.axis_index(axes)
+            n_loc = op.degree.shape[0]
+            n_comp, comp_loc = graph_component_probe(
+                op, n, row_offset=idx * n_loc)
+            comp_full = gather(comp_loc)
+        else:
+            n_comp = jnp.int32(-1)
+            comp_full = jnp.full((n,), -1, jnp.int32)
+        return labels, v_full, emb_full, t_cols, done, status, n_comp, \
+            comp_full
+
+    out = shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(axes), _carry_specs(axes), P()),
+        out_specs=(P(),) * 8,
+        check_rep=False,
+    )(x, carry, key)
+    labels, v, emb_full, t_cols, done, status, n_comp, comp = out
+    health = HealthReport(col_status=status,
+                          isolated_rows=iso.astype(jnp.int32),
                           n_components=n_comp, components=comp)
     return make_pic_result(labels, v, t_cols, done, embedding=embedding,
                            embeddings=emb_full, health=health)

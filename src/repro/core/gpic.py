@@ -56,14 +56,42 @@ from .operators import (
 )
 from .pic import PICResult, make_pic_result
 from .power import (
+    backfill_snapshots,
     batched_power_iteration,
+    ensemble_embedding,
+    finalize_power_carry,
+    init_power_carry,
     init_power_vectors,
+    power_iteration_segment,
     run_power_embedding,
     standardize_columns,
 )
 
 #: kept under its historical name for callers that batch a custom matvec
 _truncated_power_iteration = batched_power_iteration
+
+
+def _build_engine_operator(x, spec, *, engine, a_dtype=jnp.float32,
+                           tile=None, use_pallas=True, block_sparse=True):
+    """The ONE local operator construction: normalize features per the
+    spec's kind and bind the selected engine. Shared by the monolithic
+    entry points and the segmented (resumable) ones, so both trace the
+    identical build — a prerequisite of the bitwise-resume guarantee
+    (DESIGN.md §14)."""
+    if engine == "matrix_free":
+        return matrix_free_operator(row_normalize_features(x), spec=spec,
+                                    use_pallas=use_pallas)
+    inp = x if spec.kind == "rbf" else row_normalize_features(x)
+    if engine == "explicit":
+        return explicit_operator(inp, spec=spec, a_dtype=a_dtype, tile=tile,
+                                 use_pallas=use_pallas,
+                                 block_sparse=block_sparse)
+    if engine == "streaming":
+        return streaming_operator(inp, spec=spec, tile=tile,
+                                  use_pallas=use_pallas,
+                                  block_sparse=block_sparse)
+    raise ValueError(f"unknown engine {engine!r} "
+                     "(expected 'explicit' or 'streaming')")
 
 
 @functools.partial(
@@ -118,19 +146,12 @@ def gpic(
     spec = as_affinity_spec(affinity, kind=affinity_kind, sigma=sigma)
     spec.validate_for_n(n)
 
-    inp = x if spec.kind == "rbf" else row_normalize_features(x)
-
-    if engine == "explicit":
-        op = explicit_operator(inp, spec=spec, a_dtype=a_dtype, tile=tile,
-                               use_pallas=use_pallas,
-                               block_sparse=block_sparse)
-    elif engine == "streaming":
-        op = streaming_operator(inp, spec=spec, tile=tile,
-                                use_pallas=use_pallas,
-                                block_sparse=block_sparse)
-    else:
+    if engine not in ("explicit", "streaming"):
         raise ValueError(f"unknown engine {engine!r} "
                          "(expected 'explicit' or 'streaming')")
+    op = _build_engine_operator(x, spec, engine=engine, a_dtype=a_dtype,
+                                tile=tile, use_pallas=use_pallas,
+                                block_sparse=block_sparse)
 
     kkm, krand = jax.random.split(key)
     v0 = init_power_vectors(krand, op.degree, n_vectors)
@@ -196,8 +217,8 @@ def gpic_matrix_free(
     if eps is None:
         eps = 1e-5 / n
     spec = as_affinity_spec(affinity, kind=affinity_kind)
-    xn = row_normalize_features(x)
-    op = matrix_free_operator(xn, spec=spec, use_pallas=use_pallas)
+    op = _build_engine_operator(x, spec, engine="matrix_free",
+                                use_pallas=use_pallas)
 
     kkm, krand = jax.random.split(key)
     v0 = init_power_vectors(krand, op.degree, n_vectors)
@@ -210,5 +231,155 @@ def gpic_matrix_free(
                        force_reference=not use_pallas)
     # factorable specs are never truncated — the probe cannot arm
     health = _local_health(op, status, n, spec, probe_components=False)
+    return make_pic_result(labels, v, t_cols, done, embedding=embedding,
+                           embeddings=emb_raw, health=health)
+
+
+# ---------------------------------------------------------------------------
+# Segmented (resumable) execution — the local engines in bounded pieces
+# ---------------------------------------------------------------------------
+#
+# The supervisor (core/pipeline.py) drives these three entry points when
+# ``GPICConfig.checkpoint_every`` is set: ``gpic_segment_start`` builds the
+# operator and seeds the sweep-0 carry exactly as the monolithic ``gpic``
+# does, ``gpic_segment`` advances the carry by one bounded piece (the carry
+# round-trips through train/checkpoint.py between calls), and
+# ``gpic_segment_finalize`` closes the finished carry into the same
+# PICResult the monolithic run returns — k-means, health, ensemble
+# backfill. ``embedding`` is resolved to loop parameters by
+# ``pipeline._segment_plan`` ('ensemble' runs mode='pic' with its snapshot
+# schedule; the flatten happens at finalize). The loop body is the
+# monolithic one (core/power.py), so results are bitwise (DESIGN.md §14).
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "affinity", "engine", "a_dtype", "tile", "use_pallas",
+        "block_sparse", "n_vectors", "mode", "qr_every", "snapshot_iters",
+        "residual_tol",
+    ),
+)
+def gpic_segment_start(
+    x: jax.Array,
+    stop: jax.Array,
+    *,
+    key: jax.Array,
+    eps: float,
+    affinity: AffinitySpec,
+    engine: str = "explicit",
+    a_dtype=jnp.float32,
+    tile: int | None = None,
+    use_pallas: bool = True,
+    block_sparse: bool = True,
+    n_vectors: int = 1,
+    mode: str = "pic",
+    qr_every: int = 1,
+    snapshot_iters: tuple = (),
+    residual_tol: float | None = None,
+):
+    """Build the operator, seed the sweep-0 carry (the monolithic seeding,
+    bitwise: ``key`` is the krand half of the front door's split), and run
+    the first segment to ``stop``. Returns ``(carry, isolated_rows)`` —
+    the isolated-row count rides in the checkpoint manifest so resumed
+    attempts skip the degree recount."""
+    op = _build_engine_operator(x, affinity, engine=engine, a_dtype=a_dtype,
+                                tile=tile, use_pallas=use_pallas,
+                                block_sparse=block_sparse)
+    v0 = init_power_vectors(key, op.degree, n_vectors)
+    carry = init_power_carry(v0, len(snapshot_iters))
+    carry = power_iteration_segment(
+        op, carry, eps, stop, mode=mode, qr_every=qr_every,
+        snapshot_iters=snapshot_iters, residual_tol=residual_tol)
+    return carry, count_bad_rows(op.degree)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "affinity", "engine", "a_dtype", "tile", "use_pallas",
+        "block_sparse", "mode", "qr_every", "snapshot_iters", "residual_tol",
+    ),
+)
+def gpic_segment(
+    x: jax.Array,
+    carry,
+    stop: jax.Array,
+    *,
+    eps: float,
+    affinity: AffinitySpec,
+    engine: str = "explicit",
+    a_dtype=jnp.float32,
+    tile: int | None = None,
+    use_pallas: bool = True,
+    block_sparse: bool = True,
+    mode: str = "pic",
+    qr_every: int = 1,
+    snapshot_iters: tuple = (),
+    residual_tol: float | None = None,
+):
+    """Advance a restored carry by one bounded segment (rebuilds the
+    operator from the features — the build is deterministic, so the
+    regenerated sweeps are the ones the uninterrupted run performed)."""
+    op = _build_engine_operator(x, affinity, engine=engine, a_dtype=a_dtype,
+                                tile=tile, use_pallas=use_pallas,
+                                block_sparse=block_sparse)
+    return power_iteration_segment(
+        op, carry, eps, stop, mode=mode, qr_every=qr_every,
+        snapshot_iters=snapshot_iters, residual_tol=residual_tol)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k", "kmeans_iters", "affinity", "engine", "a_dtype", "tile",
+        "use_pallas", "block_sparse", "embedding", "snapshot_iters",
+        "probe_components",
+    ),
+)
+def gpic_segment_finalize(
+    x: jax.Array,
+    carry,
+    iso: jax.Array,
+    k: int,
+    *,
+    key: jax.Array,
+    kmeans_iters: int = 25,
+    affinity: AffinitySpec,
+    engine: str = "explicit",
+    a_dtype=jnp.float32,
+    tile: int | None = None,
+    use_pallas: bool = True,
+    block_sparse: bool = True,
+    embedding: str = "pic",
+    snapshot_iters: tuple = (),
+    probe_components: bool = True,
+) -> PICResult:
+    """Close a finished carry into the monolithic run's PICResult:
+    COL_MAXITER latching, the ensemble backfill/flatten, standardize,
+    k-means (``key`` is the kkm half of the front door's split), and the
+    health assembly. The operator is rebuilt only when the component
+    probe arms (truncated specs)."""
+    n = x.shape[0]
+    t, v, t_cols, done, snaps, status = finalize_power_carry(carry)
+    if embedding == "ensemble":
+        snaps = backfill_snapshots(snaps, v, t, snapshot_iters)
+        emb_raw = ensemble_embedding(snaps)
+    else:
+        emb_raw = v
+    emb = standardize_columns(emb_raw)
+    labels, _ = kmeans(key, emb, k, iters=kmeans_iters,
+                       force_reference=not use_pallas)
+    if probe_components and affinity.truncated:
+        op = _build_engine_operator(
+            x, affinity, engine=engine, a_dtype=a_dtype, tile=tile,
+            use_pallas=use_pallas, block_sparse=block_sparse)
+        n_comp, comp = graph_component_probe(op, n)
+    else:
+        n_comp = jnp.int32(-1)
+        comp = jnp.full((n,), -1, jnp.int32)
+    health = HealthReport(col_status=status,
+                          isolated_rows=iso.astype(jnp.int32),
+                          n_components=n_comp, components=comp)
     return make_pic_result(labels, v, t_cols, done, embedding=embedding,
                            embeddings=emb_raw, health=health)

@@ -59,6 +59,20 @@ class PowerDivergenceError(GPICError):
     there is no embedding left to cluster."""
 
 
+class CheckpointCorruptError(GPICError):
+    """A convergence-carry snapshot failed its integrity check (per-leaf
+    checksum mismatch, truncated/missing leaf file, unreadable manifest).
+    The supervisor skips the corrupt snapshot back to the previous valid
+    step (noted ``checkpoint_skipped:<dir>``) instead of crashing."""
+
+
+class StragglerTimeout(GPICError):
+    """A bounded execution segment exceeded the configured wall-clock
+    budget (``GPICConfig.straggler_timeout``) — the watchdog signal the
+    supervisor classifies as retryable, resuming the segment from the
+    last snapshot instead of re-running from sweep 0."""
+
+
 # ---------------------------------------------------------------------------
 # Per-column status codes (bitmask — a column can stall AND hit max_iter)
 # ---------------------------------------------------------------------------
@@ -77,6 +91,25 @@ _STATUS_NAMES = (
     (COL_NONFINITE, "nonfinite"),
     (COL_ZERO, "zero"),
 )
+
+#: note prefixes that record a RECOVERY event (the supervisor resumed,
+#: retried, or skipped a corrupt snapshot) rather than residual damage —
+#: a run whose only notes are recovery notes and whose arrays are clean
+#: classifies 'recovered', not 'degraded' (ClusteringFaultHarness)
+RECOVERY_NOTE_PREFIXES = (
+    "resumed:",
+    "retry:",
+    "straggler:",
+    "checkpoint_skipped:",
+    "kernel_fallback_retried:",
+    "kernel_fallback_resumed:",
+)
+
+
+def is_recovery_note(note: str) -> bool:
+    """True when ``note`` records a supervisor recovery event (resume /
+    retry / corrupt-snapshot skip) rather than residual result damage."""
+    return note.startswith(RECOVERY_NOTE_PREFIXES)
 
 
 def describe_status(code: int) -> tuple[str, ...]:
@@ -113,16 +146,59 @@ class HealthReport:
     #: — static metadata attached by the front door, not a traced leaf
     notes: tuple = field(metadata=dict(static=True), default=())
 
-    def summary(self) -> dict:
-        """Host-side dict view (concrete results only)."""
+    def to_dict(self) -> dict:
+        """Host-side dict view (concrete results only) — the per-request
+        status object the serving path returns alongside labels.
+
+        ``status`` classifies the whole run: 'ok' (clean arrays, no
+        notes), 'recovered' (clean arrays, but the supervisor resumed /
+        retried / skipped a corrupt snapshot on the way — the recovery
+        history is in ``notes``), or 'degraded' (bad columns, isolated
+        rows, or a non-recovery event such as sanitization or an
+        un-retried kernel fallback).
+        """
         import numpy as np
         status = np.asarray(self.col_status)
+        codes = status.tolist()
+        bad_columns = sum(1 for c in codes if c != COL_OK)
+        iso = int(self.isolated_rows)
+        recovery = [n for n in self.notes if is_recovery_note(n)]
+        damage = [n for n in self.notes if not is_recovery_note(n)]
+        if bad_columns or iso or damage:
+            run_status = "degraded"
+        elif recovery:
+            run_status = "recovered"
+        else:
+            run_status = "ok"
         return {
-            "col_status": [describe_status(c) for c in status.tolist()],
-            "isolated_rows": int(self.isolated_rows),
+            "status": run_status,
+            "col_status": [describe_status(c) for c in codes],
+            "bad_columns": bad_columns,
+            "isolated_rows": iso,
             "n_components": int(self.n_components),
             "notes": list(self.notes),
+            "recovery": recovery,
         }
+
+    def summary(self) -> str:
+        """One human-readable line of the run's health (concrete results
+        only) — status class, bad-column / isolated-row counts, and the
+        notes (including the supervisor's retry/resume history)."""
+        d = self.to_dict()
+        parts = [
+            f"status={d['status']}",
+            f"bad_columns={d['bad_columns']}/{len(d['col_status'])}",
+            f"isolated_rows={d['isolated_rows']}",
+        ]
+        if d["n_components"] >= 0:
+            parts.append(f"n_components={d['n_components']}")
+        flagged = [f"{i}:{'+'.join(f)}" for i, f in enumerate(d["col_status"])
+                   if f != ("ok",)]
+        if flagged:
+            parts.append("cols[" + " ".join(flagged) + "]")
+        if d["notes"]:
+            parts.append("notes[" + "; ".join(d["notes"]) + "]")
+        return "GPIC health: " + " ".join(parts)
 
 
 def empty_health(r: int, n: int) -> HealthReport:

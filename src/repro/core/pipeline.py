@@ -29,8 +29,10 @@ Routing table (operator names from core/operators.py):
 """
 from __future__ import annotations
 
+import os
+import time
 from dataclasses import dataclass, replace
-from typing import Any, Sequence
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -38,11 +40,28 @@ from jax.sharding import Mesh
 
 from ..kernels import ops
 from .affinity import AffinityKind, AffinitySpec, as_affinity_spec
-from .distributed import distributed_gpic, distributed_gpic_matrix_free
-from .gpic import gpic, gpic_matrix_free
-from .health import raise_for_health, validate_features
+from .distributed import (
+    distributed_gpic,
+    distributed_gpic_matrix_free,
+    distributed_gpic_segment,
+    distributed_gpic_segment_finalize,
+    distributed_gpic_segment_start,
+)
+from .gpic import (
+    gpic,
+    gpic_matrix_free,
+    gpic_segment,
+    gpic_segment_finalize,
+    gpic_segment_start,
+)
+from .health import (
+    GPICError,
+    StragglerTimeout,
+    raise_for_health,
+    validate_features,
+)
 from .pic import PICResult
-from .power import EMBEDDINGS
+from .power import EMBEDDINGS, default_snapshot_iters, power_carry_like
 
 ENGINES = ("explicit", "streaming", "matrix_free")
 
@@ -115,6 +134,44 @@ class GPICConfig:
                     re-runs the whole pipeline on the reference oracles
                     (``use_pallas=False``) for a CONSISTENT trajectory;
                     the note upgrades to ``kernel_fallback_retried:<op>``.
+                    Under the supervisor (``checkpoint_every``) it upgrades
+                    further: the tainted segment is discarded and the run
+                    resumes from the last snapshot on the oracles
+                    (``kernel_fallback_resumed:<op>``).
+
+    Resumable execution (the PR-9 supervisor, DESIGN.md §14):
+      checkpoint_every: run the power loop in bounded segments of this many
+                    sweeps, snapshotting the full convergence carry after
+                    each through ``train/checkpoint.py``. The segment
+                    boundary only moves where the while_loop STOPS — every
+                    sweep's arithmetic is the monolithic loop's, so a run
+                    interrupted at any sweep and resumed is bitwise
+                    identical to the uninterrupted run. Set together with
+                    ckpt_dir (both or neither).
+      ckpt_dir:     snapshot directory. If it already holds a valid
+                    snapshot (a previous attempt died), the run resumes
+                    from it (``resumed:<sweep>`` note) instead of
+                    restarting at sweep 0. Corrupt snapshots (checksum
+                    mismatch, truncated leaves) are quarantined and the
+                    supervisor falls back to the previous valid step
+                    (``checkpoint_skipped:<dir>``).
+      max_retries:  attempts the supervisor may restart after a retryable
+                    failure (typed GPICError, injected fault, straggler
+                    timeout) before re-raising. Each retry resumes from
+                    the last snapshot and is recorded as
+                    ``retry:<n>:<ErrorClass>``.
+      backoff:      base seconds for exponential backoff between retries
+                    (sleep = backoff · 2^(attempt-1); 0 = immediate).
+      straggler_timeout: wall-clock budget per segment in seconds; a
+                    segment exceeding it raises
+                    :class:`~repro.core.health.StragglerTimeout` (noted
+                    ``straggler:<sweep>:<sec>``), which the retry loop
+                    treats like any other retryable fault. Works without
+                    checkpointing (the whole run is then one segment).
+      inject_ring_fault: fault-injection hook forwarded to the sharded
+                    streaming engine — ('ring_nan', stage) poisons that
+                    ring stage's consumed block with NaN (requires mesh +
+                    engine='streaming'; tests/test_resume.py).
     """
     engine: str = "explicit"
     mesh: Mesh | None = None
@@ -139,6 +196,12 @@ class GPICConfig:
     sanitize: bool = False
     component_probe: bool = True
     retry_on_fallback: bool = False
+    checkpoint_every: int | None = None
+    ckpt_dir: str | None = None
+    max_retries: int = 3
+    backoff: float = 0.0
+    straggler_timeout: float | None = None
+    inject_ring_fault: tuple | None = None
 
     def with_(self, **updates) -> "GPICConfig":
         """Functional update (``dataclasses.replace`` with a shorter name)."""
@@ -151,6 +214,7 @@ def run_gpic(
     config: GPICConfig | None = None,
     *,
     key: jax.Array | None = None,
+    segment_injector: Callable[[int], None] | None = None,
     **overrides,
 ) -> PICResult:
     """Run GPIC as described by ``config`` (plus keyword overrides).
@@ -166,6 +230,15 @@ def run_gpic(
     after the run (every row isolated, every power column dead); anything
     less total returns normally with the damage described in
     ``result.health`` — never silent garbage.
+
+    ``segment_injector`` is the fault-injection hook of the supervised
+    (resumable) path: a callable invoked with the current sweep count at
+    every segment boundary, free to raise (e.g.
+    ``FailureInjector.maybe_fail``) — the supervisor classifies the raise
+    as retryable and resumes from the last snapshot. Passing it (or
+    setting ``checkpoint_every`` / ``straggler_timeout``) routes the run
+    through the segmented engines; the trajectory stays bitwise identical
+    to the monolithic path (DESIGN.md §14).
     """
     cfg = config or GPICConfig()
     if overrides:
@@ -243,6 +316,28 @@ def run_gpic(
         raise ValueError(
             "a_dtype (O4) selects the A *storage* dtype; the streaming "
             "engine never stores A")
+    if (cfg.checkpoint_every is None) != (cfg.ckpt_dir is None):
+        raise ValueError(
+            "checkpoint_every and ckpt_dir come as a pair (a snapshot "
+            "cadence needs a directory and vice versa); set both or "
+            "neither")
+    if cfg.checkpoint_every is not None and cfg.checkpoint_every < 1:
+        raise ValueError(
+            f"checkpoint_every must be >= 1 (a period in sweeps), got "
+            f"{cfg.checkpoint_every}")
+    if cfg.max_retries < 0:
+        raise ValueError(f"max_retries must be >= 0, got {cfg.max_retries}")
+    if cfg.backoff < 0:
+        raise ValueError(f"backoff must be >= 0 seconds, got {cfg.backoff}")
+    if cfg.straggler_timeout is not None and not cfg.straggler_timeout > 0:
+        raise ValueError(
+            f"straggler_timeout must be > 0 seconds, got "
+            f"{cfg.straggler_timeout}")
+    if cfg.inject_ring_fault is not None and (
+            cfg.mesh is None or cfg.engine != "streaming"):
+        raise ValueError(
+            "inject_ring_fault poisons a sharded streaming ring stage; it "
+            "needs mesh set and engine='streaming'")
     if key is None:
         key = jax.random.key(cfg.seed)
 
@@ -283,28 +378,229 @@ def run_gpic(
             a_dtype=c.a_dtype, fold_shift=c.fold_shift,
             tile=c.tile, use_pallas=c.use_pallas,
             block_sparse=c.block_sparse,
-            probe_components=c.component_probe, **common)
+            probe_components=c.component_probe,
+            inject_ring_fault=c.inject_ring_fault, **common)
 
-    res = _route(cfg)
-
-    # attach host-side events (sanitization, kernel fallbacks that first
-    # fired during this run) and apply the unusable-result checks
-    new_fallback_ops = tuple(sorted(
-        op for op in ops.kernel_fallbacks() if op not in fallbacks_before))
-    note_tag = "kernel_fallback"
-    if new_fallback_ops and cfg.retry_on_fallback and cfg.use_pallas:
-        # a mid-run fallback leaves a MIXED kernel/reference trajectory
-        # (only the ops that failed were served by their oracles); re-run
-        # the whole pipeline on the reference oracles so every sweep of
-        # the reported result came from ONE consistent implementation
-        res = _route(cfg.with_(use_pallas=False))
-        note_tag = "kernel_fallback_retried"
-    new_fallbacks = tuple(
-        f"{note_tag}:{op}" for op in new_fallback_ops)
-    notes = tuple(health_notes) + new_fallbacks
+    supervised = (cfg.checkpoint_every is not None
+                  or cfg.straggler_timeout is not None
+                  or segment_injector is not None)
+    if supervised:
+        # the resumable path handles fallback classification itself (it
+        # must not save a kernel/reference-mixed segment)
+        res, sup_notes = _run_supervised(
+            x, k, cfg, key=key, spec=spec,
+            segment_injector=segment_injector)
+        notes = tuple(health_notes) + sup_notes
+    else:
+        res = _route(cfg)
+        # attach host-side events (kernel fallbacks that first fired
+        # during this run)
+        new_fallback_ops = tuple(sorted(
+            op for op in ops.kernel_fallbacks()
+            if op not in fallbacks_before))
+        note_tag = "kernel_fallback"
+        if new_fallback_ops and cfg.retry_on_fallback and cfg.use_pallas:
+            # a mid-run fallback leaves a MIXED kernel/reference trajectory
+            # (only the ops that failed were served by their oracles);
+            # re-run the whole pipeline on the reference oracles so every
+            # sweep of the reported result came from ONE consistent
+            # implementation
+            res = _route(cfg.with_(use_pallas=False))
+            note_tag = "kernel_fallback_retried"
+        notes = tuple(health_notes) + tuple(
+            f"{note_tag}:{op}" for op in new_fallback_ops)
     if res.health is not None and notes:
         res = replace(res, health=replace(
             res.health, notes=res.health.notes + notes))
     if res.health is not None:
         raise_for_health(res.health, x.shape[0])
     return res
+
+
+def _segment_plan(cfg: GPICConfig):
+    """Resolve the loop-mode arguments of the segmented engines so the
+    segment trajectory IS the monolithic one: 'ensemble' is the classic
+    'pic' loop with a snapshot schedule (resolved here to the same default
+    geometric schedule ``ensemble_power_iteration`` derives, with the same
+    validation), the other embeddings pass through unchanged.
+
+    Returns (mode, qr_every, snapshot_iters, residual_tol).
+    """
+    if cfg.embedding != "ensemble":
+        return cfg.embedding, cfg.qr_every, (), cfg.residual_tol
+    si = tuple(int(s) for s in (
+        cfg.snapshot_iters if cfg.snapshot_iters is not None
+        else default_snapshot_iters(cfg.max_iter)))
+    if not si or list(si) != sorted(set(si)):
+        raise ValueError(
+            f"snapshot_iters must be non-empty strictly ascending ints, "
+            f"got {si!r}")
+    if si[0] < 1 or si[-1] > cfg.max_iter:
+        raise ValueError(
+            f"snapshot_iters {si!r} must lie in [1, max_iter="
+            f"{cfg.max_iter}]")
+    return "pic", 1, si, None
+
+
+class _FallbackResume(Exception):
+    """Internal control flow: a segment first tripped a kernel fallback
+    under ``retry_on_fallback`` — the segment is tainted (mixed kernel /
+    reference sweeps), so it is discarded unsaved and the run resumes from
+    the last snapshot on the reference oracles."""
+
+    def __init__(self, fallback_ops):
+        super().__init__(f"kernel fallback mid-segment: {fallback_ops}")
+        self.fallback_ops = fallback_ops
+
+
+def _run_supervised(x, k, cfg: GPICConfig, *, key, spec, segment_injector):
+    """The resumable-execution supervisor (DESIGN.md §14).
+
+    Runs the power loop in bounded segments through the segmented engine
+    entry points, snapshotting the convergence carry after each segment,
+    and classifies failures into retry-with-resume: a typed
+    :class:`~repro.core.health.GPICError` (divergence, straggler timeout,
+    injected fault) restarts the attempt from the newest valid snapshot
+    with exponential backoff; a first kernel fallback under
+    ``retry_on_fallback`` discards the tainted segment and resumes on the
+    reference oracles. Because segmentation only moves where the
+    while_loop STOPS, every completed sweep is the monolithic loop's —
+    resumed runs are bitwise identical to uninterrupted ones.
+
+    Returns (result, notes): the PICResult plus the supervisor's note
+    history (``resumed:<sweep>``, ``retry:<n>:<ErrorClass>``,
+    ``checkpoint_skipped:<dir>``, ``straggler:<sweep>:<sec>``,
+    ``kernel_fallback[_resumed]:<op>``).
+    """
+    # train imports core at module load; import lazily to avoid the cycle
+    from ..train import checkpoint as ckpt
+    from ..train.fault_tolerance import StragglerMonitor
+
+    n = x.shape[0]
+    mode, qr_every, si, residual_tol = _segment_plan(cfg)
+    ce = cfg.checkpoint_every or cfg.max_iter
+    kkm, krand = jax.random.split(key)
+    local = cfg.mesh is None
+    shard_axes = (cfg.shard_axes if isinstance(cfg.shard_axes, str)
+                  else tuple(cfg.shard_axes))
+    saver = ckpt.AsyncCheckpointer() if cfg.ckpt_dir is not None else None
+    monitor = StragglerMonitor()
+    notes: list[str] = []
+
+    def seg_kwargs(use_pallas):
+        kw = dict(affinity=spec, engine=cfg.engine, a_dtype=cfg.a_dtype,
+                  tile=cfg.tile, use_pallas=use_pallas,
+                  block_sparse=cfg.block_sparse, mode=mode,
+                  qr_every=qr_every, snapshot_iters=si,
+                  residual_tol=residual_tol)
+        if local:
+            kw["eps"] = cfg.eps_scale / n
+        else:
+            kw.update(mesh=cfg.mesh, shard_axes=shard_axes,
+                      eps_scale=cfg.eps_scale, fold_shift=cfg.fold_shift,
+                      inject_ring_fault=cfg.inject_ring_fault)
+        return kw
+
+    def fin_kwargs(use_pallas):
+        kw = dict(kmeans_iters=cfg.kmeans_iters, affinity=spec,
+                  engine=cfg.engine, a_dtype=cfg.a_dtype, tile=cfg.tile,
+                  use_pallas=use_pallas, block_sparse=cfg.block_sparse,
+                  embedding=cfg.embedding, snapshot_iters=si,
+                  probe_components=cfg.component_probe)
+        if not local:
+            kw.update(mesh=cfg.mesh, shard_axes=shard_axes,
+                      fold_shift=cfg.fold_shift)
+        return kw
+
+    start_fn = gpic_segment_start if local else distributed_gpic_segment_start
+    step_fn = gpic_segment if local else distributed_gpic_segment
+    fin_fn = gpic_segment_finalize if local else distributed_gpic_segment_finalize
+
+    def attempt(use_pallas):
+        carry = iso = None
+        if cfg.ckpt_dir is not None:
+            like = power_carry_like(n, cfg.n_vectors, len(si))
+            tree, step, path, skipped = ckpt.restore_latest_valid(
+                cfg.ckpt_dir, like)
+            for p in skipped:
+                notes.append(f"checkpoint_skipped:{os.path.basename(p)}")
+            if tree is not None:
+                carry = tree
+                iso = jnp.asarray(
+                    ckpt.manifest_extra(path).get("isolated_rows", 0),
+                    jnp.int32)
+                notes.append(f"resumed:{step}")
+        kw = seg_kwargs(use_pallas)
+        while True:
+            t_now = 0
+            if carry is not None:
+                t_now = int(jax.device_get(carry.t))
+                if (t_now >= cfg.max_iter
+                        or bool(jax.device_get(jnp.all(carry.done)))):
+                    break
+            if segment_injector is not None:
+                segment_injector(t_now)
+            stop = jnp.int32(min(t_now + ce, cfg.max_iter))
+            before = ops.kernel_fallbacks()
+            t0 = time.monotonic()
+            if carry is None:
+                carry, iso = start_fn(x, stop, key=krand,
+                                      n_vectors=cfg.n_vectors, **kw)
+            else:
+                carry = step_fn(x, carry, stop, **kw)
+            jax.block_until_ready(carry.v)
+            sec = time.monotonic() - t0
+            t_after = int(jax.device_get(carry.t))
+            monitor.record(t_after, sec)
+            if (cfg.straggler_timeout is not None
+                    and sec > cfg.straggler_timeout):
+                notes.append(f"straggler:{t_after}:{sec:.3f}")
+                raise StragglerTimeout(
+                    f"segment ending at sweep {t_after} took {sec:.3f}s "
+                    f"(straggler_timeout={cfg.straggler_timeout}s); "
+                    "resuming from the last snapshot")
+            new = tuple(sorted(o for o in ops.kernel_fallbacks()
+                               if o not in before))
+            if new and cfg.retry_on_fallback and use_pallas:
+                raise _FallbackResume(new)   # tainted segment: NOT saved
+            notes.extend(f"kernel_fallback:{o}" for o in new)
+            if saver is not None:
+                saver.save_async(
+                    os.path.join(cfg.ckpt_dir, f"step_{t_after:06d}"),
+                    carry, step=t_after,
+                    extra={"isolated_rows": int(jax.device_get(iso)),
+                           "sweep": t_after})
+        before = ops.kernel_fallbacks()
+        res = fin_fn(x, carry, iso, k, key=kkm, **fin_kwargs(use_pallas))
+        jax.block_until_ready(res.labels)
+        new = tuple(sorted(o for o in ops.kernel_fallbacks()
+                           if o not in before))
+        if new and cfg.retry_on_fallback and use_pallas:
+            raise _FallbackResume(new)
+        notes.extend(f"kernel_fallback:{o}" for o in new)
+        return res
+
+    use_pallas = cfg.use_pallas
+    retries = 0
+    try:
+        while True:
+            try:
+                return attempt(use_pallas), tuple(notes)
+            except _FallbackResume as e:
+                if saver is not None:
+                    saver.wait()     # land pending snapshots before restore
+                notes.extend(f"kernel_fallback_resumed:{o}"
+                             for o in e.fallback_ops)
+                use_pallas = False   # not a retry: a consistency downgrade
+            except GPICError as e:
+                if saver is not None:
+                    saver.wait()
+                retries += 1
+                if retries > cfg.max_retries:
+                    raise
+                notes.append(f"retry:{retries}:{type(e).__name__}")
+                if cfg.backoff:
+                    time.sleep(cfg.backoff * (2 ** (retries - 1)))
+    finally:
+        if saver is not None:
+            saver.wait()

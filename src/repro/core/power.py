@@ -176,31 +176,73 @@ def subspace_residual(op, v, u):
     return jnp.where(jnp.isfinite(rel) & (denom > 0), rel, jnp.inf)
 
 
-def _power_loop(op, v0, eps, max_iter, mode, qr_every, snapshot_iters,
-                residual_tol=None, collect_health=True):
-    """The one convergence loop behind every embedding mode. Returns
-    (t, V, t_cols, done, snaps, status) with snaps (n_loc, r, S) holding
-    the block at each requested iteration count (S = len(snapshot_iters))
-    and status the (r,) int32 per-column COL_* health bitmask.
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class PowerCarry:
+    """The FULL convergence-loop carry — everything the engine threads
+    through one sweep, as one checkpointable pytree (DESIGN.md §14).
 
-    ``residual_tol`` (static; block mode only) arms the subspace residual
-    stopping rule: on every QR step, once the pinned column 0 has converged
-    by its classic acceleration rule, a relative residual <= residual_tol
-    latches ALL remaining columns done — the block stops at subspace
-    convergence instead of running to max_iter. None (the default) compiles
-    the exact PR-3 loop.
-
-    ``collect_health`` (static) arms the divergence latches: a column whose
-    L1 mass hits exact zero (COL_ZERO) or that produced a NaN/Inf
-    (COL_NONFINITE) is zeroed and latched done — the fault can never
-    propagate into other columns through a later QR — and a column whose
-    acceleration statistic stops improving for STALL_PATIENCE sweeps is
-    flagged COL_STALLED (diagnostic only). On a clean run every latch
-    predicate is False, so the selected values are bitwise the unlatched
-    ones — the health layer is a pure observer (DESIGN.md §12).
-    ``collect_health=False`` compiles the loop without the latch
-    computations (the benchmark baseline for pricing them).
+    A run interrupted after any sweep resumes bitwise-identically from
+    this value: the loop body is a pure function of (carry, operator), so
+    exporting the carry (``train/checkpoint.py``), restoring it, and
+    continuing with :func:`power_iteration_segment` replays EXACTLY the
+    trajectory the uninterrupted loop would have produced — same
+    eps-crossings, same health latches, same per-column counters.
     """
+    t: jax.Array        # () int32 — completed sweeps
+    v: jax.Array        # (n_loc, r) — the engine state block
+    delta: jax.Array    # (n_loc, r) — |v_t − v_{t−1}| (delta_0 = v_0)
+    done: jax.Array     # (r,) bool — per-column convergence latches
+    t_cols: jax.Array   # (r,) int32 — per-column iteration counters
+    snaps: jax.Array    # (n_loc, r, S) — ensemble snapshot stack (S = 0
+    #                     outside embedding='ensemble')
+    status: jax.Array   # (r,) int32 — COL_* health latches
+    best: jax.Array     # (r,) f32 — best acceleration seen (stall rule)
+    since: jax.Array    # (r,) int32 — sweeps since ``best`` improved
+
+
+def _carry_state(carry: PowerCarry) -> tuple:
+    """The raw while_loop 9-tuple (kept a plain tuple inside the loop so
+    the traced jaxpr is byte-identical to the historical one)."""
+    return (carry.t, carry.v, carry.delta, carry.done, carry.t_cols,
+            carry.snaps, carry.status, carry.best, carry.since)
+
+
+def _init_state(v0, n_snapshots: int) -> tuple:
+    """The sweep-0 loop state — the ONE construction both the monolithic
+    loop and :func:`init_power_carry` use, so a segmented run starts from
+    exactly the uninterrupted run's initial state."""
+    r = v0.shape[1]
+    return (
+        jnp.int32(0), v0, v0,                      # delta_0 <- v_0 (line 1)
+        jnp.zeros((r,), bool), jnp.zeros((r,), jnp.int32),
+        jnp.zeros(v0.shape + (n_snapshots,), v0.dtype),
+        jnp.zeros((r,), jnp.int32),                # status
+        jnp.full((r,), jnp.inf, jnp.float32),      # best accel (stall)
+        jnp.zeros((r,), jnp.int32),                # sweeps since improved
+    )
+
+
+def init_power_carry(v0, n_snapshots: int = 0) -> PowerCarry:
+    """The sweep-0 :class:`PowerCarry` for an (n_loc, r) start block.
+    ``n_snapshots`` sizes the ensemble snapshot stack (0 = none)."""
+    return PowerCarry(*_init_state(v0, n_snapshots))
+
+
+def power_carry_like(n, r, n_snapshots: int = 0, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree of the carry for a global (n, r) state —
+    the ``like`` argument checkpoint restore needs (DESIGN.md §14)."""
+    sds = jax.ShapeDtypeStruct
+    return PowerCarry(
+        t=sds((), jnp.int32), v=sds((n, r), dtype), delta=sds((n, r), dtype),
+        done=sds((r,), jnp.bool_), t_cols=sds((r,), jnp.int32),
+        snaps=sds((n, r, n_snapshots), dtype), status=sds((r,), jnp.int32),
+        best=sds((r,), jnp.float32), since=sds((r,), jnp.int32))
+
+
+def _validate_loop_args(mode, qr_every, residual_tol, r):
+    """Shared host-side argument checks of the loop and its segmented
+    form. Returns (block, residual) — the static routing flags."""
     if mode not in ("pic", "orthogonal"):
         raise ValueError(
             f"unknown power-loop mode {mode!r} (expected 'pic' or "
@@ -211,8 +253,6 @@ def _power_loop(op, v0, eps, max_iter, mode, qr_every, snapshot_iters,
         raise ValueError(
             f"residual_tol must be > 0 (a relative residual), got "
             f"{residual_tol}")
-    op = as_operator(op)
-    r = v0.shape[1]
     block = mode == "orthogonal" and r > 1
     residual = residual_tol is not None
     if residual and not block:
@@ -220,10 +260,27 @@ def _power_loop(op, v0, eps, max_iter, mode, qr_every, snapshot_iters,
             "residual_tol needs a QR-coupled block (mode='orthogonal' "
             f"with r > 1); got mode={mode!r}, r={r} — the rule could "
             "never arm")
+    return block, residual
+
+
+def _run_loop_state(op, state, eps, bound, mode, qr_every, snapshot_iters,
+                    residual_tol=None, collect_health=True):
+    """Advance a raw loop state until ``t >= bound`` or every column is
+    done — the while_loop shared by the monolithic loop (bound = max_iter,
+    a Python int, compiling the historical jaxpr unchanged) and the
+    segmented form (bound = a traced stop sweep). The BODY is the one
+    function in the repo that defines a sweep; segmentation only changes
+    where the while_loop stops, never what a sweep computes — that is the
+    whole bitwise-resume guarantee (DESIGN.md §14).
+    """
+    block, residual = _validate_loop_args(
+        mode, qr_every, residual_tol, state[1].shape[1])
+    op = as_operator(op)
+    r = state[1].shape[1]
 
     def cond(state):
         t, _v, _delta, done = state[:4]
-        return jnp.logical_and(t < max_iter, jnp.logical_not(jnp.all(done)))
+        return jnp.logical_and(t < bound, jnp.logical_not(jnp.all(done)))
 
     def body(state):
         t, v, delta, done, t_cols, snaps, status, best, since = state
@@ -303,20 +360,83 @@ def _power_loop(op, v0, eps, max_iter, mode, qr_every, snapshot_iters,
         return (t + 1, v_next, delta_next, done, t_cols, snaps,
                 status, best, since)
 
-    state = (
-        jnp.int32(0), v0, v0,                      # delta_0 <- v_0 (line 1)
-        jnp.zeros((r,), bool), jnp.zeros((r,), jnp.int32),
-        jnp.zeros(v0.shape + (len(snapshot_iters),), v0.dtype),
-        jnp.zeros((r,), jnp.int32),                # status
-        jnp.full((r,), jnp.inf, jnp.float32),      # best accel (stall)
-        jnp.zeros((r,), jnp.int32),                # sweeps since improved
-    )
+    return jax.lax.while_loop(cond, body, state)
+
+
+def _power_loop(op, v0, eps, max_iter, mode, qr_every, snapshot_iters,
+                residual_tol=None, collect_health=True):
+    """The one convergence loop behind every embedding mode. Returns
+    (t, V, t_cols, done, snaps, status) with snaps (n_loc, r, S) holding
+    the block at each requested iteration count (S = len(snapshot_iters))
+    and status the (r,) int32 per-column COL_* health bitmask.
+
+    ``residual_tol`` (static; block mode only) arms the subspace residual
+    stopping rule: on every QR step, once the pinned column 0 has converged
+    by its classic acceleration rule, a relative residual <= residual_tol
+    latches ALL remaining columns done — the block stops at subspace
+    convergence instead of running to max_iter. None (the default) compiles
+    the exact PR-3 loop.
+
+    ``collect_health`` (static) arms the divergence latches: a column whose
+    L1 mass hits exact zero (COL_ZERO) or that produced a NaN/Inf
+    (COL_NONFINITE) is zeroed and latched done — the fault can never
+    propagate into other columns through a later QR — and a column whose
+    acceleration statistic stops improving for STALL_PATIENCE sweeps is
+    flagged COL_STALLED (diagnostic only). On a clean run every latch
+    predicate is False, so the selected values are bitwise the unlatched
+    ones — the health layer is a pure observer (DESIGN.md §12).
+    ``collect_health=False`` compiles the loop without the latch
+    computations (the benchmark baseline for pricing them).
+    """
+    state = _init_state(v0, len(snapshot_iters))
     (t, v, _delta, done, t_cols, snaps,
-     status, _best, _since) = jax.lax.while_loop(cond, body, state)
+     status, _best, _since) = _run_loop_state(
+        op, state, eps, max_iter, mode, qr_every, snapshot_iters,
+        residual_tol=residual_tol, collect_health=collect_health)
     if collect_health:
         status = (status | jnp.where(~done, COL_MAXITER, 0)).astype(
             jnp.int32)
     return t, v, t_cols, done, snaps, status
+
+
+def power_iteration_segment(op, carry: PowerCarry, eps, stop, *, mode="pic",
+                            qr_every=1, snapshot_iters=(),
+                            residual_tol=None,
+                            collect_health=True) -> PowerCarry:
+    """Advance the convergence carry by a bounded segment: run sweeps
+    until ``carry.t >= stop`` or every column is done, and return the new
+    carry. ``stop`` may be a traced scalar (one compiled segment program
+    serves every boundary) — the loop BODY is byte-identical to the
+    monolithic loop's, so a run split into segments (with the carry
+    round-tripped through a checkpoint between them) reproduces the
+    uninterrupted trajectory bitwise (DESIGN.md §14). Apply
+    :func:`finalize_power_carry` once ``stop`` has reached max_iter or
+    all columns are done.
+    """
+    state = _run_loop_state(
+        op, _carry_state(carry), eps, stop, mode, qr_every, snapshot_iters,
+        residual_tol=residual_tol, collect_health=collect_health)
+    return PowerCarry(*state)
+
+
+def finalize_power_carry(carry: PowerCarry, *, collect_health=True):
+    """Close out a finished carry exactly as the monolithic loop does on
+    exit: latch COL_MAXITER on still-unconverged columns. Returns the
+    ``(t, v, t_cols, done, snaps, status)`` tuple of ``_power_loop``."""
+    status = carry.status
+    if collect_health:
+        status = (status | jnp.where(~carry.done, COL_MAXITER, 0)).astype(
+            jnp.int32)
+    return (carry.t, carry.v, carry.t_cols, carry.done, carry.snaps, status)
+
+
+def backfill_snapshots(snaps, v, t, snapshot_iters):
+    """Fill ensemble snapshot slots the loop never reached (early exit
+    before their diffusion time) with the final frozen block — the ONE
+    implementation of the backfill both the monolithic ensemble loop and
+    the segmented finalize use."""
+    written = jnp.asarray(snapshot_iters, jnp.int32) <= t         # (S,)
+    return jnp.where(written[None, None, :], snaps, v[:, :, None])
 
 
 def batched_power_iteration(op, v0, eps, max_iter, *, mode="pic",
@@ -400,8 +520,7 @@ def ensemble_power_iteration(op, v0, eps, max_iter, *,
             f"{max_iter}]")
     t, v, t_cols, done, snaps, status = _power_loop(
         op, v0, eps, max_iter, "pic", 1, snapshot_iters)
-    written = jnp.asarray(snapshot_iters, jnp.int32) <= t         # (S,)
-    snaps = jnp.where(written[None, None, :], snaps, v[:, :, None])
+    snaps = backfill_snapshots(snaps, v, t, snapshot_iters)
     return snaps, t_cols, done, v, status
 
 

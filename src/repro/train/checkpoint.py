@@ -22,11 +22,14 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..core.health import CheckpointCorruptError
 
 
 def _flatten(tree):
@@ -36,6 +39,12 @@ def _flatten(tree):
 
 def _treedef_to_str(treedef) -> str:
     return str(treedef)
+
+
+def _leaf_crc(arr: np.ndarray) -> int:
+    """CRC32 of a leaf's raw bytes (C-contiguous view) — the per-leaf
+    integrity check recorded in the manifest and re-verified on restore."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 def save(path: str, tree: Any, *, step: int, extra: Optional[dict] = None):
@@ -59,7 +68,8 @@ def save(path: str, tree: Any, *, step: int, extra: Optional[dict] = None):
             arr = arr.view(np.uint16)
         np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
         manifest["leaves"].append(
-            {"dtype": logical_dtype, "shape": list(arr.shape)})
+            {"dtype": logical_dtype, "shape": list(arr.shape),
+             "crc32": _leaf_crc(arr)})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(path):
@@ -101,23 +111,41 @@ def restore(path: str, like: Any, *, mesh=None, specs=None):
     any size/shape)."""
     from jax.sharding import NamedSharding
 
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {path}: unreadable manifest ({e})") from e
     leaves_like, treedef = _flatten(like)
-    assert manifest["n_leaves"] == len(leaves_like), (
-        f"checkpoint has {manifest['n_leaves']} leaves, expected "
-        f"{len(leaves_like)}")
+    if manifest["n_leaves"] != len(leaves_like):
+        raise CheckpointCorruptError(
+            f"checkpoint {path}: has {manifest['n_leaves']} leaves, "
+            f"expected {len(leaves_like)}")
     out = []
     spec_leaves = None
     if specs is not None:
         spec_leaves = jax.tree_util.tree_leaves(
             specs, is_leaf=lambda s: isinstance(s, tuple) or s is None)
     for i, ref in enumerate(leaves_like):
-        arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
-        if manifest["leaves"][i]["dtype"] == "bfloat16":
+        entry = manifest["leaves"][i]
+        try:
+            arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+        except (OSError, ValueError, EOFError) as e:
+            raise CheckpointCorruptError(
+                f"checkpoint {path}: leaf {i} missing or truncated "
+                f"({e})") from e
+        # crc32 absent in pre-PR-9 manifests — those restore unchecked
+        if "crc32" in entry and _leaf_crc(arr) != entry["crc32"]:
+            raise CheckpointCorruptError(
+                f"checkpoint {path}: leaf {i} checksum mismatch "
+                f"(stored crc32={entry['crc32']})")
+        if entry["dtype"] == "bfloat16":
             arr = arr.view(jnp.bfloat16)
-        assert tuple(arr.shape) == tuple(ref.shape), (
-            f"leaf {i}: shape {arr.shape} != expected {ref.shape}")
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise CheckpointCorruptError(
+                f"checkpoint {path}: leaf {i} shape {arr.shape} != "
+                f"expected {tuple(ref.shape)}")
         a = jnp.asarray(arr, dtype=ref.dtype)
         if mesh is not None and spec_leaves is not None:
             from ..distributed.sharding import logical_to_spec
@@ -136,3 +164,47 @@ def latest_step(root: str) -> Optional[str]:
     steps = sorted(d for d in os.listdir(root)
                    if d.startswith("step_") and not d.endswith(".tmp"))
     return os.path.join(root, steps[-1]) if steps else None
+
+
+def manifest_extra(path: str) -> dict:
+    """The ``extra`` dict a snapshot was saved with (raises
+    :class:`CheckpointCorruptError` on an unreadable manifest)."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            return json.load(f).get("extra", {})
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {path}: unreadable manifest ({e})") from e
+
+
+def quarantine(path: str) -> str:
+    """Rename a corrupt snapshot dir so ``latest_step`` skips it (keeping
+    the bytes on disk for post-mortem). Returns the new path."""
+    root, name = os.path.split(path)
+    dst = os.path.join(root, "corrupt_" + name)   # no step_ prefix →
+    if os.path.exists(dst):                       # latest_step skips it
+        shutil.rmtree(dst)
+    os.replace(path, dst)
+    return dst
+
+
+def restore_latest_valid(root: str, like: Any, *, mesh=None, specs=None):
+    """Restore the newest snapshot under ``root`` that passes its integrity
+    checks, quarantining corrupt ones and falling back to the previous
+    valid step — the supervisor's resume entry point.
+
+    Returns (tree, step, path, skipped): ``skipped`` lists the quarantined
+    dirs (original names), newest first. (None, None, None, skipped) when
+    no valid snapshot survives.
+    """
+    skipped: list[str] = []
+    while True:
+        path = latest_step(root)
+        if path is None:
+            return None, None, None, skipped
+        try:
+            tree, step = restore(path, like, mesh=mesh, specs=specs)
+            return tree, step, path, skipped
+        except CheckpointCorruptError:
+            skipped.append(path)
+            quarantine(path)

@@ -1,0 +1,455 @@
+"""The PR-9 resumable-execution suite: bitwise resume parity + supervisor.
+
+The hard guarantee under test: segmentation only moves where the power
+while_loop STOPS, never what a sweep computes — so a run interrupted at
+ANY sweep and resumed from its snapshot is bitwise identical (labels,
+embeddings, per-column iteration counts, health latches) to the
+uninterrupted run, for every engine, locally and on the 8-device mesh
+(DESIGN.md §14). Around that core:
+
+  checkpointed == plain   supervised runs with snapshots every few sweeps
+                          return the monolithic result bitwise
+  interrupt + resume      injected SimulatedFailure at a sweep; the
+                          supervisor restores the newest snapshot and the
+                          final result matches the uninterrupted baseline
+  kill + fresh call       a run that dies (max_retries=0) leaves snapshots
+                          a NEW run_gpic call resumes from (resumed:<t>)
+  corrupt snapshots       checksum-failing snapshots are quarantined and
+                          the supervisor falls back to the previous valid
+                          step (checkpoint_skipped note) — still bitwise
+  straggler watchdog      a segment over budget raises the typed
+                          StragglerTimeout, consumed by the retry loop
+  concurrent faults       multi-fault schedules (isolated rows + forced
+                          kernel failure + injected sweep failures; ring
+                          NaN + isolated rows on the mesh) land on the
+                          contracted outcome per class — never a crash
+
+Mesh tests run in the 8-host-device subprocess harness (same as
+test_robustness.py) and are marked slow.
+"""
+import os
+import shutil
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import run_in_mesh_subprocess
+from repro.core import (
+    AffinitySpec,
+    CheckpointCorruptError,
+    GPICConfig,
+    GPICError,
+    StragglerTimeout,
+    is_recovery_note,
+    run_gpic,
+)
+from repro.data.synthetic import gaussians
+from repro.train.fault_tolerance import (
+    FailureInjector,
+    FaultSchedule,
+    SimulatedFailure,
+    apply_feature_faults,
+    run_schedule,
+)
+
+
+def _blobs(n=96, k=3, seed=0):
+    return gaussians(n, k=k, seed=seed)[0]
+
+
+def _fields(res):
+    return tuple(np.asarray(jax.device_get(a)) for a in (
+        res.labels, res.embeddings, res.n_iter_cols, res.converged_cols,
+        res.health.col_status, res.health.isolated_rows))
+
+
+def _assert_bitwise(a, b, ctx=""):
+    names = ("labels", "embeddings", "n_iter_cols", "converged_cols",
+             "col_status", "isolated_rows")
+    for name, fa, fb in zip(names, _fields(a), _fields(b)):
+        assert np.array_equal(fa, fb), f"{ctx}: {name} differs"
+
+
+# ---------------------------------------------------------------------------
+# Local: checkpointed / interrupted / resumed runs are bitwise the plain run
+# ---------------------------------------------------------------------------
+
+
+class TestLocalResumeParity:
+    CASES = [
+        ("explicit", "pic", 1),
+        ("explicit", "ensemble", 2),
+        ("streaming", "orthogonal", 4),
+        ("matrix_free", "pic", 2),
+    ]
+
+    @pytest.mark.parametrize("engine,embedding,r", CASES)
+    def test_checkpointed_equals_plain(self, tmp_path, engine, embedding, r):
+        x = _blobs()
+        cfg = GPICConfig(engine=engine, embedding=embedding, n_vectors=r,
+                         max_iter=30)
+        base = run_gpic(x, 3, cfg)
+        sup = run_gpic(x, 3, cfg.with_(checkpoint_every=7,
+                                       ckpt_dir=str(tmp_path / "ck")))
+        _assert_bitwise(base, sup, f"{engine}/{embedding}/r={r}")
+        assert sup.health.notes == ()  # an undisturbed run leaves no trace
+
+    @pytest.mark.parametrize("engine,embedding,r", CASES)
+    def test_interrupted_and_resumed_is_bitwise(self, tmp_path, engine,
+                                                embedding, r):
+        x = _blobs()
+        cfg = GPICConfig(engine=engine, embedding=embedding, n_vectors=r,
+                         max_iter=30)
+        base = run_gpic(x, 3, cfg)
+        inj = FailureInjector(fail_at_steps=(7,))
+        res = run_gpic(x, 3, cfg.with_(checkpoint_every=7,
+                                       ckpt_dir=str(tmp_path / "ck")),
+                       segment_injector=inj.maybe_fail)
+        _assert_bitwise(base, res, f"{engine}/{embedding}/r={r}")
+        assert "retry:1:SimulatedFailure" in res.health.notes
+        assert "resumed:7" in res.health.notes
+        assert all(is_recovery_note(n) for n in res.health.notes)
+
+    def test_kill_then_fresh_call_resumes(self, tmp_path):
+        """A run that exhausts its retries leaves snapshots on disk; the
+        next run_gpic call with the same ckpt_dir resumes instead of
+        restarting — the cross-process resume path, bitwise."""
+        x = _blobs()
+        # eps_scale=1e-7 keeps the run alive ~19 sweeps so the boundary-10
+        # injection fires before convergence breaks the segment loop
+        cfg = GPICConfig(max_iter=30, eps_scale=1e-7, checkpoint_every=5,
+                         ckpt_dir=str(tmp_path / "ck"), max_retries=0)
+        inj = FailureInjector(fail_at_steps=(10,))
+        with pytest.raises(SimulatedFailure):
+            run_gpic(x, 3, cfg, segment_injector=inj.maybe_fail)
+        res = run_gpic(x, 3, cfg)
+        base = run_gpic(x, 3, GPICConfig(max_iter=30, eps_scale=1e-7))
+        _assert_bitwise(base, res, "kill+rerun")
+        assert "resumed:10" in res.health.notes
+
+    def test_corrupt_snapshot_skips_to_previous_valid(self, tmp_path):
+        """Flipping bytes in the newest snapshot's leaf trips the per-leaf
+        checksum; the supervisor quarantines it, resumes from the previous
+        valid step, and still reproduces the baseline bitwise."""
+        x = _blobs()
+        root = str(tmp_path / "ck")
+        cfg = GPICConfig(max_iter=30, eps_scale=1e-7, checkpoint_every=5,
+                         ckpt_dir=root, max_retries=0)
+        inj = FailureInjector(fail_at_steps=(10,))
+        with pytest.raises(SimulatedFailure):
+            run_gpic(x, 3, cfg, segment_injector=inj.maybe_fail)
+        newest = sorted(d for d in os.listdir(root)
+                        if d.startswith("step_"))[-1]
+        leaf = os.path.join(root, newest, "leaf_00001.npy")
+        raw = bytearray(open(leaf, "rb").read())
+        raw[-32:] = b"\xff" * 32
+        open(leaf, "wb").write(bytes(raw))
+        res = run_gpic(x, 3, cfg)
+        base = run_gpic(x, 3, GPICConfig(max_iter=30, eps_scale=1e-7))
+        _assert_bitwise(base, res, "corrupt-skip")
+        assert f"checkpoint_skipped:{newest}" in res.health.notes
+        assert any(n.startswith("resumed:") for n in res.health.notes)
+        # the corrupt dir is quarantined, not deleted
+        assert os.path.isdir(os.path.join(root, "corrupt_" + newest))
+
+    def test_every_interrupt_sweep_is_bitwise(self, tmp_path):
+        """Snapshot every sweep and interrupt at {1, mid, last-1}: resume
+        parity must hold at ANY boundary, not just multiples of a coarse
+        cadence."""
+        x = _blobs()
+        base_cfg = GPICConfig(max_iter=30)
+        base = run_gpic(x, 3, base_cfg)
+        t_final = int(np.max(np.asarray(base.n_iter_cols)))
+        assert t_final > 3  # the three interrupt points must be distinct
+        for s in (1, t_final // 2, t_final - 1):
+            d = str(tmp_path / f"ck{s}")
+            inj = FailureInjector(fail_at_steps=(s,))
+            res = run_gpic(x, 3,
+                           base_cfg.with_(checkpoint_every=1, ckpt_dir=d),
+                           segment_injector=inj.maybe_fail)
+            _assert_bitwise(base, res, f"interrupt@{s}")
+            assert f"resumed:{s}" in res.health.notes
+
+    def test_straggler_timeout_is_typed_and_retried(self):
+        x = _blobs()
+        with pytest.raises(StragglerTimeout):
+            run_gpic(x, 3, GPICConfig(max_iter=30, straggler_timeout=1e-9,
+                                      max_retries=2))
+
+    def test_straggler_timeout_with_headroom_passes(self):
+        x = _blobs()
+        res = run_gpic(x, 3, GPICConfig(max_iter=30,
+                                        straggler_timeout=600.0))
+        assert res.health.notes == ()
+
+    def test_supervised_segments_reuse_rng_stream(self, tmp_path):
+        """Same seed, different checkpoint cadence: identical results —
+        the carry round-trip must not perturb the k-means/start keys."""
+        x = _blobs()
+        cfg = GPICConfig(max_iter=30, n_vectors=3, embedding="orthogonal",
+                         seed=11)
+        a = run_gpic(x, 3, cfg.with_(checkpoint_every=3,
+                                     ckpt_dir=str(tmp_path / "a")))
+        b = run_gpic(x, 3, cfg.with_(checkpoint_every=13,
+                                     ckpt_dir=str(tmp_path / "b")))
+        _assert_bitwise(a, b, "cadence-invariance")
+
+
+# ---------------------------------------------------------------------------
+# Supervisor config contract
+# ---------------------------------------------------------------------------
+
+
+class TestSupervisorConfig:
+    def test_checkpoint_fields_come_as_a_pair(self, tmp_path):
+        with pytest.raises(ValueError, match="pair"):
+            run_gpic(_blobs(), 3, GPICConfig(checkpoint_every=5))
+        with pytest.raises(ValueError, match="pair"):
+            run_gpic(_blobs(), 3, GPICConfig(ckpt_dir=str(tmp_path)))
+
+    def test_checkpoint_every_must_be_positive(self, tmp_path):
+        with pytest.raises(ValueError, match="checkpoint_every"):
+            run_gpic(_blobs(), 3, GPICConfig(checkpoint_every=0,
+                                             ckpt_dir=str(tmp_path)))
+
+    def test_straggler_timeout_must_be_positive(self):
+        with pytest.raises(ValueError, match="straggler_timeout"):
+            run_gpic(_blobs(), 3, GPICConfig(straggler_timeout=0.0))
+
+    def test_ring_fault_needs_mesh_streaming(self):
+        with pytest.raises(ValueError, match="ring"):
+            run_gpic(_blobs(), 3,
+                     GPICConfig(inject_ring_fault=("ring_nan", 0)))
+
+    def test_backoff_and_retries_validated(self):
+        with pytest.raises(ValueError, match="max_retries"):
+            run_gpic(_blobs(), 3, GPICConfig(max_retries=-1))
+        with pytest.raises(ValueError, match="backoff"):
+            run_gpic(_blobs(), 3, GPICConfig(backoff=-0.5))
+
+
+# ---------------------------------------------------------------------------
+# Concurrent-fault schedules (local half of the matrix)
+# ---------------------------------------------------------------------------
+
+
+class TestConcurrentFaults:
+    def test_transient_failures_recover_clean(self, tmp_path):
+        """Only transient faults (injected sweep failures) → the arrays
+        come back clean and the outcome is 'recovered', distinct from
+        'degraded'."""
+        rec = run_schedule(
+            _blobs(), 3, FaultSchedule(fail_sweeps=(5, 10)),
+            GPICConfig(max_iter=30, eps_scale=1e-7, checkpoint_every=5,
+                       ckpt_dir=str(tmp_path / "ck")))
+        assert rec["status"] == "recovered", rec
+        assert any(n.startswith("resumed:") for n in rec["notes"])
+        assert sum(n.startswith("retry:") for n in rec["notes"]) == 2
+
+    def test_multi_fault_run_degrades_not_crashes(self, tmp_path):
+        """Isolated rows AND a forced kernel failure AND injected sweep
+        failures in ONE run: the supervisor absorbs the transients (retry
+        history in notes) and reports the permanent damage as 'degraded' —
+        no unclassified crash."""
+        from repro.kernels import ops as kops
+        kops.reset_kernel_fallbacks()
+        jax.clear_caches()
+        try:
+            rec = run_schedule(
+                _blobs(), 3,
+                FaultSchedule(isolate_rows=(95,),
+                              kernel_failure="degree_normalized_matmat",
+                              fail_sweeps=(5,)),
+                GPICConfig(affinity=AffinitySpec(kind="rbf", sigma=0.5),
+                           max_iter=30, checkpoint_every=5,
+                           ckpt_dir=str(tmp_path / "ck")))
+        finally:
+            kops.reset_kernel_fallbacks()
+            jax.clear_caches()
+        assert rec["status"] == "degraded", rec
+        assert rec["health"]["isolated_rows"] >= 1
+        assert any(n.startswith("retry:") for n in rec["notes"])
+        assert any(n.startswith("kernel_fallback") for n in rec["notes"])
+
+    def test_fallback_resume_keeps_reference_consistency(self, tmp_path):
+        """retry_on_fallback under the supervisor: the tainted segment is
+        discarded and the run resumes on the reference oracles from the
+        last snapshot — the result matches the all-reference run bitwise
+        and the note upgrades to kernel_fallback_resumed."""
+        from repro.kernels import ops as kops
+        kops.reset_kernel_fallbacks()
+        jax.clear_caches()
+        x = _blobs()
+        cfg = GPICConfig(embedding="orthogonal", n_vectors=2, max_iter=30,
+                         retry_on_fallback=True)
+        try:
+            with kops.forced_kernel_failure("gram"):
+                res = run_gpic(x, 3, cfg.with_(
+                    checkpoint_every=7, ckpt_dir=str(tmp_path / "ck")))
+            ref = run_gpic(x, 3, cfg.with_(use_pallas=False))
+            assert any(n.startswith("kernel_fallback_resumed:gram")
+                       for n in res.health.notes), res.health.notes
+            for name in ("labels", "embeddings", "n_iter_cols"):
+                assert np.array_equal(
+                    np.asarray(jax.device_get(getattr(res, name))),
+                    np.asarray(jax.device_get(getattr(ref, name)))), name
+        finally:
+            kops.reset_kernel_fallbacks()
+            jax.clear_caches()
+
+    def test_apply_feature_faults_composes(self):
+        x = apply_feature_faults(
+            jnp.zeros((8, 2), jnp.float32),
+            FaultSchedule(nan_rows=(1,), isolate_rows=(4,)))
+        assert not bool(jnp.isfinite(x[1]).any())
+        assert bool((x[4] == 60.0).all())
+        assert bool((x[0] == 0.0).all())
+
+    def test_health_to_dict_and_summary(self):
+        res = run_gpic(_blobs(), 3, GPICConfig(max_iter=30))
+        d = res.health.to_dict()
+        assert d["status"] == "ok" and d["bad_columns"] == 0
+        s = res.health.summary()
+        assert isinstance(s, str) and "status=ok" in s
+
+
+# ---------------------------------------------------------------------------
+# 8-device mesh: resume parity + concurrent faults (slow, subprocess)
+# ---------------------------------------------------------------------------
+
+_MESH_PRELUDE = """
+    import os, numpy as np
+    import jax, jax.numpy as jnp
+    from repro.core import AffinitySpec, GPICConfig, run_gpic
+    from repro.core.distributed import shard_points
+    from repro.core.health import PowerDivergenceError
+    from repro.data.synthetic import gaussians
+    from repro.train.fault_tolerance import (
+        FailureInjector, FaultSchedule, run_schedule)
+
+    mesh = jax.make_mesh((8,), ("data",))
+
+    def fields(res):
+        return tuple(np.asarray(jax.device_get(a)) for a in (
+            res.labels, res.embeddings, res.n_iter_cols,
+            res.converged_cols, res.health.col_status,
+            res.health.isolated_rows))
+
+    def check_bitwise(a, b, ctx):
+        names = ("labels", "embeddings", "n_iter_cols", "converged_cols",
+                 "col_status", "isolated_rows")
+        for name, fa, fb in zip(names, fields(a), fields(b)):
+            assert np.array_equal(fa, fb), f"{ctx}: {name} differs"
+    """
+
+
+def _mesh(body: str) -> str:
+    return run_in_mesh_subprocess(
+        textwrap.dedent(_MESH_PRELUDE) + textwrap.dedent(body))
+
+
+@pytest.mark.slow
+def test_mesh_resume_parity_matrix(tmp_path):
+    """Interrupt at sweeps {1, mid, last-1} × engines {explicit,
+    streaming} × r ∈ {1, 4} on the 8-device mesh: every resumed run is
+    bitwise the uninterrupted one (labels, embeddings, n_iter_cols,
+    health latches)."""
+    out = _mesh(f"""
+    root = {str(tmp_path)!r}
+    x, _ = gaussians(256, k=3, seed=0)
+    xs = shard_points(x, mesh, "data")
+    for engine in ("explicit", "streaming"):
+        for r in (1, 4):
+            cfg = GPICConfig(engine=engine, mesh=mesh, n_vectors=r,
+                             embedding="orthogonal" if r > 1 else "pic",
+                             max_iter=24)
+            base = run_gpic(xs, 3, cfg)
+            t_final = int(np.max(np.asarray(base.n_iter_cols)))
+            assert t_final > 3, (engine, r, t_final)
+            for s in (1, t_final // 2, t_final - 1):
+                d = os.path.join(root, f"ck_{{engine}}_{{r}}_{{s}}")
+                inj = FailureInjector(fail_at_steps=(s,))
+                res = run_gpic(xs, 3,
+                               cfg.with_(checkpoint_every=1, ckpt_dir=d),
+                               segment_injector=inj.maybe_fail)
+                check_bitwise(base, res, f"{{engine}} r={{r}} @{{s}}")
+                assert f"resumed:{{s}}" in res.health.notes
+                print("OK", engine, r, s)
+    """)
+    assert out.count("OK") == 12
+
+
+@pytest.mark.slow
+def test_mesh_checkpointed_equals_plain(tmp_path):
+    """Undisturbed supervised runs on the mesh (both sharded engines,
+    coarse cadence) return the monolithic result bitwise, with no notes."""
+    out = _mesh(f"""
+    root = {str(tmp_path)!r}
+    x, _ = gaussians(256, k=3, seed=0)
+    xs = shard_points(x, mesh, "data")
+    for engine in ("explicit", "streaming"):
+        cfg = GPICConfig(engine=engine, mesh=mesh, n_vectors=2,
+                         embedding="ensemble", max_iter=24)
+        base = run_gpic(xs, 3, cfg)
+        sup = run_gpic(xs, 3, cfg.with_(
+            checkpoint_every=7, ckpt_dir=os.path.join(root, engine)))
+        check_bitwise(base, sup, engine)
+        assert sup.health.notes == ()
+        print("OK", engine)
+    """)
+    assert out.count("OK") == 2
+
+
+@pytest.mark.slow
+def test_mesh_concurrent_fault_matrix(tmp_path):
+    """Ring NaN + isolated rows in the SAME sharded streaming run, under
+    supervision: each fault class lands on its contracted outcome — the
+    ring poison kills every column (typed PowerDivergenceError), while
+    isolated rows + transient failures without the ring degrade/recover —
+    and nothing escapes as an unclassified crash."""
+    out = _mesh(f"""
+    root = {str(tmp_path)!r}
+    rs = np.random.RandomState(1)
+    x = np.concatenate([rs.randn(255, 2).astype(np.float32) * 0.2,
+                        np.full((1, 2), 60.0, np.float32)])
+    xs = shard_points(x, mesh, "data")
+    # the outlier run converges at sweep 6: a fine cadence keeps a live
+    # segment boundary (sweep 3) for the injected transient to hit
+    cfg = GPICConfig(engine="streaming", mesh=mesh,
+                     affinity=AffinitySpec(kind="rbf", sigma=0.5),
+                     max_iter=24, checkpoint_every=3)
+
+    # ring NaN + isolated row, one run: total column death is the typed
+    # error class; the harness records it instead of crashing
+    rec = run_schedule(xs, 2,
+                       FaultSchedule(ring_stage=2),
+                       cfg.with_(ckpt_dir=os.path.join(root, "ring")))
+    assert rec["status"] == "typed_error", rec["status"]
+    assert rec["error"] == "PowerDivergenceError", rec
+    print("OK ring+isolated typed")
+
+    # same run minus the ring: the isolated row is partial damage —
+    # 'degraded', with the injected sweep failure's retry/resume history
+    rec = run_schedule(xs, 2,
+                       FaultSchedule(fail_sweeps=(3,)),
+                       cfg.with_(ckpt_dir=os.path.join(root, "iso")))
+    assert rec["status"] == "degraded", rec["status"]
+    assert rec["health"]["isolated_rows"] == 1, rec["health"]
+    assert any(n.startswith("resumed:") for n in rec["notes"]), rec
+    print("OK isolated degraded with resume history")
+
+    # clean data + transient failure only: 'recovered'
+    xc, _ = gaussians(256, k=2, seed=3)
+    rec = run_schedule(shard_points(xc, mesh, "data"), 2,
+                       FaultSchedule(fail_sweeps=(6,)),
+                       cfg.with_(affinity=None, affinity_kind="rbf",
+                                 sigma=0.3,
+                                 ckpt_dir=os.path.join(root, "clean")))
+    assert rec["status"] == "recovered", rec["status"]
+    print("OK transient recovered")
+    """)
+    assert out.count("OK") == 3

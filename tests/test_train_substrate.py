@@ -261,3 +261,228 @@ class TestCompression:
         batch = make_train_batch(cfg, 2, 16, 0)
         _, _, m = step(params, opt, batch)
         assert np.isfinite(float(m["loss"]))
+
+
+class TestCheckpointIntegrity:
+    """Per-leaf CRC32 + typed CheckpointCorruptError (PR 9)."""
+
+    def _tree(self):
+        return {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                "b": jnp.ones((4,), jnp.float32)}
+
+    def test_manifest_records_crc32(self, tmp_path):
+        import json
+
+        path = str(tmp_path / "step_000001")
+        ckpt.save(path, self._tree(), step=1)
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        assert all("crc32" in leaf for leaf in manifest["leaves"])
+
+    def test_corrupt_leaf_raises_typed(self, tmp_path):
+        from repro.core.health import CheckpointCorruptError, GPICError
+
+        path = str(tmp_path / "step_000001")
+        ckpt.save(path, self._tree(), step=1)
+        leaf = os.path.join(path, "leaf_00001.npy")
+        raw = bytearray(open(leaf, "rb").read())
+        raw[-4:] = b"\xde\xad\xbe\xef"
+        open(leaf, "wb").write(bytes(raw))
+        with pytest.raises(CheckpointCorruptError, match="checksum"):
+            ckpt.restore(path, self._tree())
+        assert issubclass(CheckpointCorruptError, GPICError)
+
+    def test_truncated_leaf_raises_typed(self, tmp_path):
+        from repro.core.health import CheckpointCorruptError
+
+        path = str(tmp_path / "step_000001")
+        ckpt.save(path, self._tree(), step=1)
+        leaf = os.path.join(path, "leaf_00000.npy")
+        raw = open(leaf, "rb").read()
+        open(leaf, "wb").write(raw[: len(raw) // 2])
+        with pytest.raises(CheckpointCorruptError):
+            ckpt.restore(path, self._tree())
+
+    def test_missing_leaf_raises_typed(self, tmp_path):
+        from repro.core.health import CheckpointCorruptError
+
+        path = str(tmp_path / "step_000001")
+        ckpt.save(path, self._tree(), step=1)
+        os.remove(os.path.join(path, "leaf_00001.npy"))
+        with pytest.raises(CheckpointCorruptError, match="missing"):
+            ckpt.restore(path, self._tree())
+
+    def test_unreadable_manifest_raises_typed(self, tmp_path):
+        from repro.core.health import CheckpointCorruptError
+
+        path = str(tmp_path / "step_000001")
+        ckpt.save(path, self._tree(), step=1)
+        open(os.path.join(path, "manifest.json"), "w").write("{not json")
+        with pytest.raises(CheckpointCorruptError, match="manifest"):
+            ckpt.restore(path, self._tree())
+
+    def test_pre_crc_manifest_restores_unchecked(self, tmp_path):
+        """Backward compat: manifests written before the checksum field
+        (or by older code) restore without the integrity check."""
+        import json
+
+        path = str(tmp_path / "step_000001")
+        ckpt.save(path, self._tree(), step=1)
+        mpath = os.path.join(path, "manifest.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        for leaf in manifest["leaves"]:
+            del leaf["crc32"]
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        tree, step = ckpt.restore(path, self._tree())
+        assert step == 1
+        assert np.array_equal(np.asarray(tree["w"]),
+                              np.asarray(self._tree()["w"]))
+
+    def test_quarantine_hides_from_latest_step(self, tmp_path):
+        root = str(tmp_path)
+        for s in (1, 2):
+            ckpt.save(os.path.join(root, f"step_{s:06d}"), self._tree(),
+                      step=s)
+        newest = ckpt.latest_step(root)
+        moved = ckpt.quarantine(newest)
+        assert os.path.isdir(moved)
+        assert ckpt.latest_step(root).endswith("step_000001")
+
+    def test_restore_latest_valid_skips_corrupt(self, tmp_path):
+        root = str(tmp_path)
+        for s in (1, 2, 3):
+            ckpt.save(os.path.join(root, f"step_{s:06d}"),
+                      jax.tree_util.tree_map(lambda a, s=s: a + s,
+                                             self._tree()), step=s)
+        for s in (2, 3):  # corrupt the two newest
+            leaf = os.path.join(root, f"step_{s:06d}", "leaf_00000.npy")
+            raw = bytearray(open(leaf, "rb").read())
+            raw[-4:] = b"\x00\x00\x00\x00"
+            open(leaf, "wb").write(bytes(raw))
+        tree, step, path, skipped = ckpt.restore_latest_valid(
+            root, self._tree())
+        assert step == 1 and path.endswith("step_000001")
+        assert len(skipped) == 2
+        assert np.array_equal(np.asarray(tree["b"]),
+                              np.ones(4, np.float32) + 1)
+
+    def test_restore_latest_valid_none_when_all_corrupt(self, tmp_path):
+        root = str(tmp_path)
+        ckpt.save(os.path.join(root, "step_000001"), self._tree(), step=1)
+        os.remove(os.path.join(root, "step_000001", "manifest.json"))
+        tree, step, path, skipped = ckpt.restore_latest_valid(
+            root, self._tree())
+        assert tree is None and step is None and path is None
+        assert len(skipped) == 1
+
+
+class TestAsyncCheckpointerDirect:
+    """save_async/wait ordering and overlapping saves (PR 9 satellite —
+    previously only exercised through RestartableLoop)."""
+
+    def test_wait_without_save_is_noop(self):
+        ckpt.AsyncCheckpointer().wait()  # must not raise
+
+    def test_save_async_then_wait_lands_checkpoint(self, tmp_path):
+        saver = ckpt.AsyncCheckpointer()
+        path = str(tmp_path / "step_000003")
+        tree = {"v": jnp.arange(8.0)}
+        saver.save_async(path, tree, step=3)
+        saver.wait()
+        restored, step = ckpt.restore(path, tree)
+        assert step == 3
+        assert np.array_equal(np.asarray(restored["v"]), np.arange(8.0))
+
+    def test_wait_is_idempotent(self, tmp_path):
+        saver = ckpt.AsyncCheckpointer()
+        saver.save_async(str(tmp_path / "step_000001"),
+                         {"v": jnp.zeros(4)}, step=1)
+        saver.wait()
+        saver.wait()  # second wait: thread already joined and cleared
+
+    def test_overlapping_saves_serialize(self, tmp_path):
+        """A second save_async blocks on the first (double buffering): both
+        checkpoints land, distinct and complete, and latest_step sees the
+        newest."""
+        saver = ckpt.AsyncCheckpointer()
+        for s in range(1, 5):
+            saver.save_async(str(tmp_path / f"step_{s:06d}"),
+                             {"v": jnp.full((64,), float(s))}, step=s)
+        saver.wait()
+        assert ckpt.latest_step(str(tmp_path)).endswith("step_000004")
+        for s in range(1, 5):
+            tree, step = ckpt.restore(str(tmp_path / f"step_{s:06d}"),
+                                      {"v": jnp.zeros(64)})
+            assert step == s
+            assert np.array_equal(np.asarray(tree["v"]),
+                                  np.full((64,), float(s)))
+
+    def test_snapshot_taken_at_call_time(self, tmp_path):
+        """The host snapshot happens on the caller thread at save_async
+        time — rebinding/updating the tree afterwards must not leak into
+        the checkpoint."""
+        saver = ckpt.AsyncCheckpointer()
+        v = jnp.zeros(16)
+        saver.save_async(str(tmp_path / "step_000001"), {"v": v}, step=1)
+        v = v + 99.0  # the functional update the train loop would do next
+        saver.wait()
+        tree, _ = ckpt.restore(str(tmp_path / "step_000001"),
+                               {"v": jnp.zeros(16)})
+        assert np.array_equal(np.asarray(tree["v"]), np.zeros(16))
+
+
+class TestRestartableLoopResume:
+    """Resume-after-kill: the process dies (injector past max_restarts), a
+    NEW loop object restores from disk and finishes bit-exactly."""
+
+    def _setup(self):
+        def step_fn(state, batch):
+            new = state + batch
+            return new, {"s": jnp.sum(new)}
+
+        def data_fn(step):
+            return jnp.full((4,), float(step + 1))
+
+        return step_fn, data_fn, jnp.zeros(4)
+
+    def test_resume_after_kill_is_bit_exact(self, tmp_path):
+        step_fn, data_fn, s0 = self._setup()
+        # uninterrupted reference
+        ref_loop = RestartableLoop(step_fn, data_fn,
+                                   str(tmp_path / "ref"), ckpt_every=3)
+        ref_state, ref_step, _ = ref_loop.run(s0, 10)
+        # killed run: injector fires at step 7 with no restarts allowed
+        d = str(tmp_path / "killed")
+        loop1 = RestartableLoop(
+            step_fn, data_fn, d, ckpt_every=3, max_restarts=0,
+            injector=FailureInjector(fail_at_steps=(7,)))
+        with pytest.raises(SimulatedFailure):
+            loop1.run(s0, 10)
+        if loop1.saver:
+            loop1.saver.wait()
+        # a fresh loop (new process) restores the newest checkpoint and
+        # resumes — final state identical to the uninterrupted run
+        loop2 = RestartableLoop(step_fn, data_fn, d, ckpt_every=3)
+        restored = loop2._restore(s0)
+        assert restored is not None
+        state, step = restored
+        assert step == 6  # ckpt_every=3 → newest snapshot before the kill
+        state, step, _ = loop2.run(state, 10, start_step=step)
+        assert step == ref_step == 10
+        assert np.array_equal(np.asarray(state), np.asarray(ref_state))
+
+    def test_internal_restart_matches_fresh_resume(self, tmp_path):
+        """The loop's own catch-restore path and a manual restore from the
+        same directory agree."""
+        step_fn, data_fn, s0 = self._setup()
+        loop = RestartableLoop(
+            step_fn, data_fn, str(tmp_path / "auto"), ckpt_every=2,
+            max_restarts=3, injector=FailureInjector(fail_at_steps=(3, 5)))
+        state, step, _ = loop.run(s0, 8)
+        assert loop.restarts == 2 and step == 8
+        ref_loop = RestartableLoop(step_fn, data_fn,
+                                   str(tmp_path / "ref2"), ckpt_every=2)
+        ref_state, _, _ = ref_loop.run(s0, 8)
+        assert np.array_equal(np.asarray(state), np.asarray(ref_state))
